@@ -1,0 +1,58 @@
+"""Paper Fig. 5 / App. C: variance reduction when the VM levels are
+optimized assuming dimensionality D#, evaluated on CN_[1/D] samples —
+the observed optimum should track the true D."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import quant as quantmod
+from repro.core.variance import clipped_normal_params, optimize_levels
+
+
+def _sample_cn(D: int, n: int, rng) -> np.ndarray:
+    mu, sigma = clipped_normal_params(D, 2)
+    return np.clip(rng.normal(mu, sigma, n), 0.0, 3.0)
+
+
+def empirical_var_reduction(h: np.ndarray, levels, n_rep: int = 4) -> float:
+    hj = jnp.asarray(h, jnp.float32)[None, :]
+    lu = quantmod.uniform_levels(2)
+    lo = jnp.asarray(levels, jnp.float32)
+    eu = eo = 0.0
+    for s in range(n_rep):
+        cu = quantmod.stochastic_round_to_levels(hj, lu, s)
+        co = quantmod.stochastic_round_to_levels(hj, lo, s + 77)
+        eu += float(jnp.sum((hj - jnp.take(lu, cu)) ** 2))
+        eo += float(jnp.sum((hj - jnp.take(lo, co)) ** 2))
+    return 1.0 - eo / max(eu, 1e-30)
+
+
+def run(true_ds=(16, 32, 64, 96, 128), assumed_ds=(8, 16, 32, 64, 96, 128, 256),
+        n: int = 20000):
+    rng = np.random.default_rng(0)
+    rows = []
+    for td in true_ds:
+        h = _sample_cn(td, n, rng)
+        reds = {ad: empirical_var_reduction(h, optimize_levels(ad, 2))
+                for ad in assumed_ds}
+        best = max(reds, key=reds.get)
+        rows.append({"true_D": td, "best_assumed_D": best,
+                     "red_at_true": reds.get(td, float("nan")),
+                     "reductions": reds})
+    return rows
+
+
+def main():
+    out = []
+    for r in run():
+        out.append((f"fig5/trueD={r['true_D']}", 0.0,
+                    f"best_assumed_D={r['best_assumed_D']};"
+                    f"red_at_true={100 * r['red_at_true']:.2f}%"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,51 @@
+"""Kernel micro-bench: quant/dequant/RP wall time (jnp path on CPU; the
+Pallas path runs in interpret mode and is correctness-only here) plus the
+bytes-moved model that determines TPU-side speedup."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(f, *args, n=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    out = []
+    for (nb, g) in ((4096, 256), (16384, 256), (4096, 1024)):
+        x = jax.random.normal(jax.random.PRNGKey(0), (nb, g), jnp.float32)
+        qf = jax.jit(lambda x: ops.quantize_packed(x, 2, 7, impl="jnp"))
+        us = _time(qf, x)
+        in_bytes = x.size * 4
+        out_bytes = x.size // 16 * 4 + nb * 8
+        out.append((f"kernel/quant2_pack/{nb}x{g}", us,
+                    f"in_MB={in_bytes / 1e6:.1f};out_MB={out_bytes / 1e6:.2f};"
+                    f"compress={in_bytes / out_bytes:.1f}x"))
+        packed, zero, rng = qf(x)
+        df = jax.jit(lambda p, z, r: ops.dequantize_packed(
+            p, z, r, 2, g, impl="jnp"))
+        us = _time(df, packed, zero, rng)
+        out.append((f"kernel/dequant2_unpack/{nb}x{g}", us, ""))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8192, 1024), jnp.float32)
+    rp = jax.jit(lambda x: ops.rp_project(x, 3, 128, impl="jnp"))
+    us = _time(rp, x)
+    # seeded RP saves materializing + reading R: D x r fp32 per call
+    saved = 1024 * 128 * 4
+    out.append((f"kernel/rp_project/8192x1024->128", us,
+                f"R_bytes_never_materialized={saved / 1e6:.2f}MB"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

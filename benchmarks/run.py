@@ -1,0 +1,38 @@
+"""Benchmark driver: one harness per paper table/figure + system benches.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig3_variance_surface, fig5_vm_dimensionality,
+                            kernel_throughput, lm_act_compression, roofline,
+                            table1_gnn, table2_distribution)
+
+    suites = [
+        ("fig3", fig3_variance_surface.main),
+        ("fig5", fig5_vm_dimensionality.main),
+        ("kernel", kernel_throughput.main),
+        ("table2", table2_distribution.main),
+        ("lm_act", lm_act_compression.main),
+        ("table1", table1_gnn.main),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, fn in suites:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{tag}/ERROR,0,{traceback.format_exc(limit=2)!r}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Beyond-paper: activation-compressed training of a transformer LM.
+
+Trains a reduced qwen3-32b-family config twice — plain remat vs ACT
+(INT2 block-quantized residual stash) — and compares losses + stash bytes.
+
+  PYTHONPATH=src python examples/train_lm_compressed.py [--steps 40]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduce_for_smoke
+from repro.core import CompressionConfig
+from repro.core.pack import packed_nbytes
+from repro.data import batch_for_step
+from repro.launch.steps import make_train_step
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=40)
+ap.add_argument("--arch", default="qwen3-32b")
+args = ap.parse_args()
+
+B, S = 4, 128
+for mode in ("remat", "act"):
+    cfg = dataclasses.replace(
+        reduce_for_smoke(ARCHS[args.arch]), act_mode=mode,
+        act_compression=CompressionConfig(bits=2, group_size=64))
+    model = Model(cfg)
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5, state_bits=8)  # 8-bit Adam too
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+    params = model.init(jax.random.PRNGKey(0))
+    state = adamw_init(params, opt)
+    losses = []
+    for s in range(args.steps):
+        toks = jnp.asarray(batch_for_step(cfg.vocab, B, S, s))
+        params, state, m = step(params, state, {"tokens": toks})
+        losses.append(float(m["loss"]))
+    full = B * S * cfg.d_model * 2
+    stash = full if mode == "remat" else packed_nbytes(
+        (B, S, cfg.d_model), 2, 64)
+    print(f"{mode:6s} loss {losses[0]:.4f} -> {losses[-1]:.4f} | "
+          f"residual stash/layer: {stash} B "
+          f"({100 * (1 - stash / full):.1f}% less than bf16)")
+print("\nboth modes train; ACT stores the per-layer residual stream at "
+      "INT2 instead of recomputing from bf16 (remat) — compose them for "
+      "the full memory ladder.")

@@ -1,0 +1,7 @@
+from repro.configs.base import (ArchConfig, SHAPES, ShapeSpec,
+                                cell_applicable, input_specs,
+                                reduce_for_smoke)
+from repro.configs.registry import ARCHS, get
+
+__all__ = ["ArchConfig", "SHAPES", "ShapeSpec", "cell_applicable",
+           "input_specs", "reduce_for_smoke", "ARCHS", "get"]

@@ -1,0 +1,29 @@
+"""i-EXACT core: block-wise SR quantization + RP + variance minimization."""
+from repro.core.compressor import (
+    CompressionConfig,
+    CompressedTensor,
+    compress,
+    decompress,
+)
+from repro.core.act_compress import (
+    compressed_block,
+    compressed_elementwise,
+    compressed_linear,
+    compressed_matmul,
+)
+from repro.core.variance import (
+    clipped_normal_params,
+    expected_sr_variance,
+    expected_sr_variance_uniform,
+    js_divergence,
+    optimize_levels,
+    variance_reduction,
+)
+
+__all__ = [
+    "CompressionConfig", "CompressedTensor", "compress", "decompress",
+    "compressed_block", "compressed_elementwise", "compressed_linear",
+    "compressed_matmul", "clipped_normal_params", "expected_sr_variance",
+    "expected_sr_variance_uniform", "js_divergence", "optimize_levels",
+    "variance_reduction",
+]

@@ -1,0 +1,108 @@
+"""Activation-compressed training primitives (``custom_vjp``).
+
+Three integration levels, lowest to highest:
+
+* :func:`compressed_matmul` — ``y = x @ w`` saving a compressed ``x``.
+  ``dx = g @ wᵀ`` stays exact (it only needs ``w``); only ``dw = x̂ᵀ g`` sees
+  the unbiased reconstruction — exactly where EXACT injects its estimator.
+* :func:`compressed_elementwise` — nonlinearity with compressed input stash.
+* :func:`compressed_block` — wrap an arbitrary block ``f(x, params)``:
+  forward runs exactly, the block *input* is stored compressed, and the
+  backward recomputes the block from the reconstruction (ACT + remat hybrid;
+  this is how transformer layers integrate under ``lax.scan``).
+
+Seeds are threaded as uint32 scalars; their cotangents are float0.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compressor import CompressionConfig, compress, decompress
+
+
+def _zero_ct(x):
+    """Cotangent for a non-differentiable (integer) input."""
+    return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------- matmul
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def compressed_matmul(x, w, seed, cfg: CompressionConfig):
+    return x @ w
+
+
+def _cm_fwd(x, w, seed, cfg):
+    y = x @ w
+    return y, (compress(x, cfg, seed), w, seed)
+
+
+def _cm_bwd(cfg, res, g):
+    ct, w, seed = res
+    x_hat = decompress(ct)
+    dx = g @ w.T
+    x2 = x_hat.reshape(-1, x_hat.shape[-1])
+    g2 = g.reshape(-1, g.shape[-1])
+    dw = (x2.T @ g2).astype(w.dtype)
+    return dx.astype(x_hat.dtype), dw, _zero_ct(seed)
+
+
+compressed_matmul.defvjp(_cm_fwd, _cm_bwd)
+
+
+def compressed_linear(x, w, b, seed, cfg: CompressionConfig):
+    y = compressed_matmul(x, w, seed, cfg)
+    return y if b is None else y + b
+
+
+# ---------------------------------------------------------- elementwise
+def compressed_elementwise(fn, x, seed, cfg: CompressionConfig):
+    """``fn(x)`` whose backward re-evaluates fn' at the reconstruction."""
+
+    @partial(jax.custom_vjp, nondiff_argnums=())
+    def g(x, seed):
+        return fn(x)
+
+    def g_fwd(x, seed):
+        return fn(x), (compress(x, cfg, seed), seed)
+
+    def g_bwd(res, ct_y):
+        ctens, seed = res
+        x_hat = decompress(ctens)
+        _, vjp = jax.vjp(fn, x_hat)
+        (dx,) = vjp(ct_y)
+        return dx, _zero_ct(seed)
+
+    g.defvjp(g_fwd, g_bwd)
+    return g(x, seed)
+
+
+# ----------------------------------------------------------------- block
+def compressed_block(f, cfg: CompressionConfig):
+    """Wrap ``f(x, params) -> y``: store compressed x, recompute f in bwd.
+
+    Equivalent memory profile to ``jax.checkpoint`` except the stashed block
+    input itself is block-quantized (the paper's technique applied at the
+    residual-stream level).  Returns ``g(x, params, seed) -> y``.
+    """
+
+    @jax.custom_vjp
+    def g(x, params, seed):
+        return f(x, params)
+
+    def g_fwd(x, params, seed):
+        y = f(x, params)
+        return y, (compress(x, cfg, seed), params, seed)
+
+    def g_bwd(res, ct_y):
+        ctens, params, seed = res
+        x_hat = decompress(ctens)
+        _, vjp = jax.vjp(f, x_hat, params)
+        dx, dparams = vjp(ct_y)
+        return dx, dparams, _zero_ct(seed)
+
+    g.defvjp(g_fwd, g_bwd)
+    return g

@@ -1,0 +1,115 @@
+"""User-facing compression API: config + compress/decompress.
+
+``CompressedTensor`` is the stored form of an activation map: densely packed
+codes + per-block (zero, range) + the RP seed if random projection was used.
+It is a registered pytree so it can sit in ``custom_vjp`` residuals, scan
+carries, and checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack as packmod
+from repro.core import quant as quantmod
+from repro.core import random_projection as rpmod
+from repro.core.variance import optimize_levels
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """How to compress an activation map.
+
+    bits        quantization precision (2 = the paper's INT2 extreme setting)
+    group_size  elements per quantization block (paper §3.1).  The paper
+                parameterizes this as G/R; we take the absolute element count.
+    rp_ratio    D/R random-projection ratio (paper uses 8); 0 disables RP.
+    vm          use variance-minimized non-uniform levels (paper §3.2).
+    vm_dim      D parameter of CN_[1/D] for level optimization; defaults to
+                the quantization block size (paper App. C uses the row dim).
+    """
+
+    bits: int = 2
+    group_size: int = 256
+    rp_ratio: int = 0
+    vm: bool = False
+    vm_dim: int | None = None
+
+    def levels(self) -> tuple[float, ...] | None:
+        if not self.vm:
+            return None
+        d = self.vm_dim or self.group_size
+        return optimize_levels(int(d), self.bits)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompressedTensor:
+    packed: jnp.ndarray        # (n_blocks, words_per_block) uint32
+    zero: jnp.ndarray          # (n_blocks,) f32
+    rng: jnp.ndarray           # (n_blocks,) f32
+    rp_seed: jnp.ndarray       # () uint32 (unused if cfg.rp_ratio == 0)
+    # --- static ---
+    shape: tuple[int, ...]     # original (pre-RP) shape
+    dtype: object
+    cfg: CompressionConfig
+
+    def tree_flatten(self):
+        return (self.packed, self.zero, self.rng, self.rp_seed), (
+            self.shape, str(jnp.dtype(self.dtype)), self.cfg)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        shape, dtype, cfg = aux
+        return cls(*children, shape=shape, dtype=jnp.dtype(dtype), cfg=cfg)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.packed.size * 4 + self.zero.size * 4 + self.rng.size * 4)
+
+    @property
+    def uncompressed_nbytes(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return int(n * jnp.dtype(self.dtype).itemsize)
+
+
+def _proj_shape(shape: tuple[int, ...], rp_ratio: int) -> tuple[int, ...]:
+    if rp_ratio <= 1:
+        return shape
+    d = shape[-1]
+    assert d % rp_ratio == 0, f"last dim {d} not divisible by rp_ratio {rp_ratio}"
+    return (*shape[:-1], d // rp_ratio)
+
+
+def compress(x: jnp.ndarray, cfg: CompressionConfig, seed) -> CompressedTensor:
+    """Forward-pass compression: (optional RP) → block-wise SR quant → pack."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    orig_shape, orig_dtype = tuple(x.shape), x.dtype
+    rp_seed = seed ^ jnp.uint32(0xA5A5_A5A5)
+    if cfg.rp_ratio > 1:
+        x = rpmod.rp(x.astype(jnp.float32), rp_seed, x.shape[-1] // cfg.rp_ratio)
+    levels = cfg.levels()
+    lv = None if levels is None else jnp.asarray(levels, jnp.float32)
+    codes, zero, rng, _ = quantmod.quantize(
+        x.astype(jnp.float32), cfg.bits, cfg.group_size, seed, lv)
+    packed = packmod.pack(codes, cfg.bits)
+    return CompressedTensor(packed, zero, rng, rp_seed,
+                            shape=orig_shape, dtype=orig_dtype, cfg=cfg)
+
+
+def decompress(ct: CompressedTensor) -> jnp.ndarray:
+    """Backward-pass recovery: unpack → dequant → (optional IRP)."""
+    cfg = ct.cfg
+    proj_shape = _proj_shape(ct.shape, cfg.rp_ratio)
+    levels = cfg.levels()
+    lv = None if levels is None else jnp.asarray(levels, jnp.float32)
+    codes = packmod.unpack(ct.packed, cfg.bits, cfg.group_size)
+    x = quantmod.dequantize(codes, ct.zero, ct.rng, cfg.bits, proj_shape, lv)
+    if cfg.rp_ratio > 1:
+        x = rpmod.irp(x, ct.rp_seed, ct.shape[-1])
+    return x.astype(ct.dtype)

@@ -1,0 +1,49 @@
+"""Counter-based deterministic RNG used by stochastic rounding.
+
+Both the pure-jnp reference path and the Pallas kernels draw their rounding
+noise from this hash, so codes are bit-identical across paths (tests assert
+exact equality, not allclose).  The hash is the murmur3 finalizer — cheap,
+vectorizes to VPU ops on TPU, and runs unchanged in ``interpret=True``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+import numpy as np
+
+# numpy-scalar constants: inlined as literals at trace time so Pallas kernels
+# don't capture closure arrays (python ints > int32 max would overflow).
+_M1 = np.uint32(0x85EB_CA6B)
+_M2 = np.uint32(0xC2B2_AE35)
+_GOLDEN = np.uint32(0x9E37_79B9)
+_RADEMACHER_SALT = np.uint32(0x517C_C1B7)
+
+
+def hash_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32 over a uint32 array."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = (x * _M1).astype(jnp.uint32)
+    x = x ^ (x >> 13)
+    x = (x * _M2).astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    return x
+
+
+def uniform_from_counter(seed, counter: jnp.ndarray) -> jnp.ndarray:
+    """U[0,1) floats from (scalar seed, uint32 counter array).
+
+    24 mantissa bits — exactly representable in float32.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    mixed = hash_u32((counter.astype(jnp.uint32) * _GOLDEN).astype(jnp.uint32)
+                     + hash_u32(seed.reshape(1)))
+    return (mixed >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def rademacher_from_counter(seed, counter: jnp.ndarray) -> jnp.ndarray:
+    """±1 int8 signs from (scalar seed, uint32 counter array)."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    mixed = hash_u32((counter.astype(jnp.uint32) * _GOLDEN).astype(jnp.uint32)
+                     + hash_u32(seed.reshape(1) + jnp.uint32(_RADEMACHER_SALT)))
+    return (jnp.int8(1) - (jnp.int8(2) * (mixed & 1).astype(jnp.int8)))

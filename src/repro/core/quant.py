@@ -1,0 +1,151 @@
+"""Block-wise stochastic-rounding quantization (paper §2, §3.1, §3.2).
+
+Reference (pure-jnp) implementation; ``repro.kernels`` provides the fused
+Pallas path and must agree bit-exactly with this module.
+
+Semantics
+---------
+A tensor is flattened and regrouped into blocks of ``group_size`` elements
+(paper Eq. 6).  Each block b stores:
+
+* ``zero[b]  = min(block)``                      (the paper's Z)
+* ``range[b] = max(block) - min(block)``         (the paper's r)
+
+The block is normalized to ``[0, B]`` with ``B = 2**bits - 1`` and every
+element is stochastically rounded to one of the quantization *levels*.
+With uniform levels (EXACT) the levels are the integers ``0..B``.  With
+variance minimization (paper §3.2) the interior levels move to the
+optimized boundaries (e.g. ``[0, α*, β*, 3]`` for INT2); stochastic
+rounding between adjacent levels keeps the estimator unbiased (paper
+App. A).  Stored codes are *indices into the level table*, so the
+bit-width is unchanged.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.prng import uniform_from_counter
+
+_EPS = 1e-10
+
+
+def uniform_levels(bits: int) -> jnp.ndarray:
+    """EXACT's integer quantization levels 0..B."""
+    return jnp.arange(2**bits, dtype=jnp.float32)
+
+
+def num_levels(bits: int) -> int:
+    return 2**bits
+
+
+def group_reshape(x: jnp.ndarray, group_size: int) -> tuple[jnp.ndarray, int]:
+    """Flatten ``x`` and regroup into (n_blocks, group_size) (paper Eq. 6).
+
+    The tail is padded by replicating the last element, which cannot widen the
+    final block's [min, max] envelope; returns (blocks, n_valid).
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % group_size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.broadcast_to(flat[-1], (pad,))])
+    return flat.reshape(-1, group_size), n
+
+
+def block_stats(blocks: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(zero, range) per block; range is clamped away from 0 for constants."""
+    zero = blocks.min(axis=-1)
+    rng = blocks.max(axis=-1) - zero
+    return zero, rng
+
+
+def stochastic_round_to_levels(
+    hnorm: jnp.ndarray,
+    levels: jnp.ndarray,
+    seed,
+    counter_base: int = 0,
+) -> jnp.ndarray:
+    """SR of normalized activations in [0, B] onto ``levels`` (paper Eq. 8).
+
+    Returns int32 codes (indices into ``levels``).  Unbiased for any strictly
+    increasing level table with levels[0]=0, levels[-1]=B (paper App. A).
+    """
+    nlev = levels.shape[0]
+    # bin index i in 1..B such that levels[i-1] <= h <= levels[i]
+    upper_idx = jnp.clip(
+        jnp.searchsorted(levels, hnorm, side="right"), 1, nlev - 1
+    ).astype(jnp.int32)
+    lo = jnp.take(levels, upper_idx - 1)
+    hi = jnp.take(levels, upper_idx)
+    p_up = (hnorm - lo) / jnp.maximum(hi - lo, _EPS)
+    counter = (
+        jnp.arange(hnorm.size, dtype=jnp.uint32).reshape(hnorm.shape)
+        + jnp.uint32(counter_base)
+    )
+    u = uniform_from_counter(seed, counter)
+    return jnp.where(u < p_up, upper_idx, upper_idx - 1).astype(jnp.int32)
+
+
+def quantize_grouped(
+    blocks: jnp.ndarray,
+    bits: int,
+    seed,
+    levels: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize (n_blocks, G) -> (codes int32, zero f32, range f32)."""
+    if levels is None:
+        levels = uniform_levels(bits)
+    B = float(2**bits - 1)
+    zero, rng = block_stats(blocks)
+    safe = jnp.maximum(rng, _EPS)
+    hnorm = (blocks - zero[:, None]) / safe[:, None] * B
+    hnorm = jnp.clip(hnorm, 0.0, B)
+    codes = stochastic_round_to_levels(hnorm, levels, seed)
+    return codes, zero.astype(jnp.float32), rng.astype(jnp.float32)
+
+
+def dequantize_grouped(
+    codes: jnp.ndarray,
+    zero: jnp.ndarray,
+    rng: jnp.ndarray,
+    bits: int,
+    levels: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Inverse of :func:`quantize_grouped` (paper Eq. 3 with level table)."""
+    if levels is None:
+        levels = uniform_levels(bits)
+    B = float(2**bits - 1)
+    vals = jnp.take(levels, codes)
+    return vals * (rng[:, None] / B) + zero[:, None]
+
+
+def quantize(
+    x: jnp.ndarray,
+    bits: int,
+    group_size: int,
+    seed,
+    levels: jnp.ndarray | None = None,
+):
+    """Block-wise quantize an arbitrary tensor.
+
+    Returns (codes (n_blocks, G) int32, zero, range, n_valid).
+    """
+    blocks, n_valid = group_reshape(x, group_size)
+    codes, zero, rng = quantize_grouped(blocks, bits, seed, levels)
+    return codes, zero, rng, n_valid
+
+
+def dequantize(
+    codes: jnp.ndarray,
+    zero: jnp.ndarray,
+    rng: jnp.ndarray,
+    bits: int,
+    shape: tuple[int, ...],
+    levels: jnp.ndarray | None = None,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    n = 1
+    for s in shape:
+        n *= s
+    blocks = dequantize_grouped(codes, zero, rng, bits, levels)
+    return blocks.reshape(-1)[:n].reshape(shape).astype(dtype)

@@ -1,0 +1,33 @@
+"""Normalized Rademacher random projection (paper Eq. 4-5, EXACT's RP/IRP).
+
+``R ∈ {±1/√r}^{D×r}`` with ``E[R Rᵀ] = I`` so RP followed by IRP is an
+unbiased reconstruction.  Signs come from the counter-based hash in
+:mod:`repro.core.prng`, which means the matrix never needs to be stored —
+the Pallas kernel (``repro.kernels.rp_matmul``) regenerates tiles of R on
+the fly (beyond-paper optimization; see DESIGN.md §3), while this module
+materializes the same matrix for the reference path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.prng import rademacher_from_counter
+
+
+def rp_matrix(seed, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    """The (d_in, d_out) normalized Rademacher matrix for ``seed``."""
+    counter = jnp.arange(d_in * d_out, dtype=jnp.uint32)
+    signs = rademacher_from_counter(seed, counter).reshape(d_in, d_out)
+    return signs.astype(dtype) * jnp.asarray(1.0 / jnp.sqrt(d_out), dtype)
+
+
+def rp(h: jnp.ndarray, seed, d_out: int) -> jnp.ndarray:
+    """Project rows of ``h`` from D to d_out (paper Eq. 4)."""
+    mat = rp_matrix(seed, h.shape[-1], d_out, h.dtype)
+    return h @ mat
+
+
+def irp(h_proj: jnp.ndarray, seed, d_in: int) -> jnp.ndarray:
+    """Recover (an unbiased estimate of) the original rows (paper Eq. 5)."""
+    mat = rp_matrix(seed, d_in, h_proj.shape[-1], h_proj.dtype)
+    return h_proj @ mat.T

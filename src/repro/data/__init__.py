@@ -1,0 +1,3 @@
+from repro.data.synthetic import batch_for_step
+
+__all__ = ["batch_for_step"]

@@ -1,0 +1,10 @@
+"""GNN substrate: the paper's own experimental domain (GCN / GraphSAGE)."""
+from repro.graph.data import Graph, arxiv_like, flickr_like, synthetic_graph
+from repro.graph.models import GNNConfig, gnn_forward, init_gnn_params
+from repro.graph.train import train_gnn, activation_memory_report
+
+__all__ = [
+    "Graph", "arxiv_like", "flickr_like", "synthetic_graph",
+    "GNNConfig", "gnn_forward", "init_gnn_params",
+    "train_gnn", "activation_memory_report",
+]

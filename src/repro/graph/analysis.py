@@ -1,0 +1,73 @@
+"""Instrumentation for the paper's Table 2 / Fig. 2 / Fig. 4-5 analyses:
+observed activation distributions, JS divergences against the uniform and
+clipped-normal models, and empirical SR variance reduction (Eq. 19).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quantmod
+from repro.core import random_projection as rpmod
+from repro.core.variance import js_divergence, model_histogram, optimize_levels
+from repro.graph.models import GNNConfig, spmm
+
+
+def collect_projected_activations(params, graph, cfg: GNNConfig,
+                                  rp_ratio: int = 8, seed: int = 0):
+    """Forward pass capturing each layer's *normalized projected* activation
+    H̄_proj (paper App. D: saved after RP, before quantization, normalized
+    per row to [0, B])."""
+    feats, src, dst, gcn_w, mean_w = graph
+    n = feats.shape[0]
+    h = feats
+    captured = []
+    for li, p in enumerate(params):
+        if cfg.arch == "gcn":
+            x = h
+        else:
+            agg = spmm(h, src, dst, mean_w, n)
+            x = jnp.concatenate([h, agg], axis=1)
+        r_dim = max(1, x.shape[1] // rp_ratio)
+        proj = rpmod.rp(x, jnp.uint32(seed + li), r_dim)
+        zero = proj.min(axis=1, keepdims=True)
+        rng = jnp.maximum(proj.max(axis=1, keepdims=True) - zero, 1e-10)
+        captured.append(np.asarray((proj - zero) / rng * 3.0))
+        z = x @ p["w"] + p["b"]
+        if cfg.arch == "gcn":
+            z = spmm(z, src, dst, gcn_w, n)
+        if li < len(params) - 1:
+            z = jnp.maximum(z, 0.0)
+        h = z
+    return captured
+
+
+def table2_row(hbar: np.ndarray, bits: int = 2, n_bins: int = 60) -> dict:
+    """JS(uniform), JS(clipped-normal), empirical VM variance reduction."""
+    R = hbar.shape[1]
+    B = 2**bits - 1
+    edges = np.linspace(0, B, n_bins + 1)
+    obs, _ = np.histogram(hbar.reshape(-1), bins=edges)
+    obs = obs / obs.sum()
+    js_u = js_divergence(obs, model_histogram(R, bits, edges, "uniform"))
+    js_cn = js_divergence(obs, model_histogram(R, bits, edges, "clipnorm"))
+
+    # Eq. 19: Var.Red = 1 − Σ(h̄ − ⌊h̄⌉*)² / Σ(h̄ − ⌊h̄⌉)²
+    h = jnp.asarray(hbar)
+    lv_u = None
+    lv_o = jnp.asarray(optimize_levels(R, bits), jnp.float32)
+    err_u, err_o, n_rep = 0.0, 0.0, 4
+    for s in range(n_rep):
+        cu = quantmod.stochastic_round_to_levels(h, quantmod.uniform_levels(bits), s)
+        co = quantmod.stochastic_round_to_levels(h, lv_o, s + 101)
+        du = jnp.take(quantmod.uniform_levels(bits), cu)
+        do = jnp.take(lv_o, co)
+        err_u += float(jnp.sum((h - du) ** 2))
+        err_o += float(jnp.sum((h - do) ** 2))
+    return {
+        "R": R,
+        "js_uniform": float(js_u),
+        "js_clipnorm": float(js_cn),
+        "var_reduction_pct": 100.0 * (1.0 - err_o / max(err_u, 1e-30)),
+    }

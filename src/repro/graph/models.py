@@ -1,0 +1,111 @@
+"""GCN (Kipf-Welling, paper Eq. 1) and GraphSAGE with EXACT-style
+activation compression.
+
+Compression placement matches EXACT/i-EXACT exactly:
+
+* the dense input of every linear is stored compressed
+  (:func:`repro.core.compressed_matmul`) — RP + block-wise SR quant;
+* ReLU saves a packed 1-bit sign mask (:func:`relu_1bit`), never the tensor;
+* the sparse aggregation ``Â·`` is linear in H — its VJP needs only the edge
+  list and weights, so it stores no float activations at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack as packmod
+from repro.core.act_compress import _zero_ct, compressed_matmul
+from repro.core.compressor import CompressionConfig
+
+
+# ------------------------------------------------------------- 1-bit ReLU
+@jax.custom_vjp
+def relu_1bit(z):
+    return jnp.maximum(z, 0.0)
+
+
+def _relu_fwd(z):
+    mask = packmod.pack((z > 0).astype(jnp.int32).reshape(z.shape[0], -1), 1)
+    return jnp.maximum(z, 0.0), (mask, z.shape)
+
+
+def _relu_bwd(res, g):
+    mask, shape = res
+    m = packmod.unpack(mask, 1, int(np.prod(shape[1:])))
+    return (g * m.reshape(shape).astype(g.dtype),)
+
+
+relu_1bit.defvjp(_relu_fwd, _relu_bwd)
+
+
+# ------------------------------------------------------------------ SpMM
+def spmm(h, src, dst, w, n_nodes: int):
+    """out[d] += w_e * h[s] over edges — the Â· product as segment-sum."""
+    msg = h[src] * w[:, None]
+    return jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+
+
+# ----------------------------------------------------------------- model
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    arch: str = "sage"                 # "gcn" | "sage"
+    hidden: tuple[int, ...] = (256, 256)
+    n_classes: int = 40
+    compression: CompressionConfig | None = None
+    dropout: float = 0.0
+
+
+def _dims(cfg: GNNConfig, in_dim: int):
+    return [in_dim, *cfg.hidden, cfg.n_classes]
+
+
+def init_gnn_params(key, cfg: GNNConfig, in_dim: int):
+    dims = _dims(cfg, in_dim)
+    params = []
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        fan_in = d_in * (2 if cfg.arch == "sage" else 1)
+        w = jax.random.normal(sub, (fan_in, d_out), jnp.float32) / np.sqrt(fan_in)
+        params.append({"w": w, "b": jnp.zeros((d_out,), jnp.float32)})
+    return params
+
+
+def _maybe_compressed_matmul(x, w, cfg: GNNConfig, seed):
+    if cfg.compression is None:
+        return x @ w
+    return compressed_matmul(x, w, seed, cfg.compression)
+
+
+def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None):
+    """graph = (features, src, dst, gcn_w, mean_w)."""
+    feats, src, dst, gcn_w, mean_w = graph
+    n = feats.shape[0]  # static under jit
+    h = feats
+    seed = jnp.asarray(seed, jnp.uint32)
+    for li, p in enumerate(params):
+        layer_seed = seed + jnp.uint32(li * 1013)
+        if cfg.arch == "gcn":
+            z = _maybe_compressed_matmul(h, p["w"], cfg, layer_seed) + p["b"]
+            z = spmm(z, src, dst, gcn_w, n)
+        else:  # sage
+            agg = spmm(h, src, dst, mean_w, n)
+            x = jnp.concatenate([h, agg], axis=1)
+            z = _maybe_compressed_matmul(x, p["w"], cfg, layer_seed) + p["b"]
+        if li < len(params) - 1:
+            z = relu_1bit(z)
+            if cfg.dropout and dropout_key is not None:
+                dropout_key, sub = jax.random.split(dropout_key)
+                keep = jax.random.bernoulli(sub, 1 - cfg.dropout, z.shape)
+                z = jnp.where(keep, z / (1 - cfg.dropout), 0.0)
+        h = z
+    return h
+
+
+def graph_tuple(g):
+    """Pull the jit-stable array tuple out of a Graph dataclass."""
+    return (g.features, g.edge_src, g.edge_dst, g.gcn_weight, g.mean_weight)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: activation
+quantize/dequantize (+pack/unpack) and the seeded random projection.
+
+``ops``  — public jit'd wrappers (impl = pallas | interp | jnp | auto)
+``ref``  — pure-jnp oracles (bit-identical codes; dequant allclose @ 1e-5)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,96 @@
+"""Public jit'd entry points for the compression kernels.
+
+``impl`` selects the path:
+  * "pallas"  — real TPU lowering (the deployment path)
+  * "interp"  — Pallas interpret mode (CPU correctness validation)
+  * "jnp"     — the pure-jnp reference (fast on CPU; same bits)
+  * "auto"    — pallas on TPU, jnp elsewhere
+
+All paths return bit-identical packed words / codes — the SR noise is a
+counter hash and the pack layout is shared (see quant_blockwise.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as refmod
+from repro.kernels import quant_blockwise as qk
+from repro.kernels import rp_matmul as rk
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return impl
+
+
+def _pad_rows(x, multiple: int):
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], 0)
+    return x, n
+
+
+def quantize_packed(x2d, bits: int, seed, levels=None, *, impl: str = "auto",
+                    rows_per_tile: int = 8):
+    """(n_blocks, G) -> (packed u32, zero (n,), rng (n,))."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return refmod.quantize_packed(x2d, bits, seed, levels)
+    xp, n = _pad_rows(x2d, rows_per_tile)
+    packed, zero, rng = qk.quant_pack_call(
+        xp, bits, seed, levels, rows_per_tile=rows_per_tile,
+        interpret=(impl == "interp"))
+    return packed[:n], zero[:n, 0], rng[:n, 0]
+
+
+def dequantize_packed(packed, zero, rng, bits: int, group_size: int,
+                      levels=None, *, impl: str = "auto",
+                      rows_per_tile: int = 8):
+    """(packed, zero (n,), rng (n,)) -> (n_blocks, G) f32."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return refmod.dequantize_packed(packed, zero, rng, bits, group_size, levels)
+    p, n = _pad_rows(packed, rows_per_tile)
+    z, _ = _pad_rows(zero[:, None], rows_per_tile)
+    r, _ = _pad_rows(rng[:, None], rows_per_tile)
+    out = qk.dequant_unpack_call(p, z, r, bits, group_size, levels,
+                                 rows_per_tile=rows_per_tile,
+                                 interpret=(impl == "interp"))
+    return out[:n]
+
+
+def _pad2d(x, tm, tk):
+    m, d = x.shape
+    pm, pd = (-m) % tm, (-d) % tk
+    if pm or pd:
+        x = jnp.pad(x, ((0, pm), (0, pd)))
+    return x, m
+
+
+def rp_project(x2d, seed, d_out: int, *, impl: str = "auto",
+               tm: int = 128, tn: int = 128, tk: int = 128):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return refmod.rp_project(x2d, seed, d_out)
+    assert d_out % tn == 0 and x2d.shape[1] % tk == 0, \
+        "rp_project pallas path needs D, d_out multiples of the tile"
+    xp, m = _pad2d(x2d, tm, tk)
+    out = rk.rp_project_call(xp, seed, d_out, tm=tm, tn=tn, tk=tk,
+                             interpret=(impl == "interp"))
+    return out[:m]
+
+
+def irp_project(x2d, seed, d_in: int, *, impl: str = "auto",
+                tm: int = 128, tn: int = 128, tk: int = 128):
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return refmod.irp_project(x2d, seed, d_in)
+    assert d_in % tn == 0 and x2d.shape[1] % tk == 0, \
+        "irp_project pallas path needs r, D multiples of the tile"
+    xp, m = _pad2d(x2d, tm, tk)
+    out = rk.irp_project_call(xp, seed, d_in, tm=tm, tn=tn, tk=tk,
+                              interpret=(impl == "interp"))
+    return out[:m]

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Semantics are defined once in ``repro.core``; these wrappers present them
+with the exact same signatures as ``repro.kernels.ops`` so tests can diff
+kernel-vs-ref bit-exactly (codes and packed words included — both paths draw
+SR noise from the same counter hash and pack with the same strided layout).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import pack as packmod
+from repro.core import quant as quantmod
+from repro.core import random_projection as rpmod
+
+
+def quantize_packed(x2d, bits: int, seed, levels=None):
+    """(n_blocks, G) f32 -> (packed u32 (n_blocks, G*bits/32), zero, rng)."""
+    lv = None if levels is None else jnp.asarray(levels, jnp.float32)
+    codes, zero, rng = quantmod.quantize_grouped(x2d, bits, seed, lv)
+    return packmod.pack(codes, bits), zero, rng
+
+
+def dequantize_packed(packed, zero, rng, bits: int, group_size: int, levels=None):
+    """Inverse of :func:`quantize_packed` -> (n_blocks, G) f32."""
+    lv = None if levels is None else jnp.asarray(levels, jnp.float32)
+    codes = packmod.unpack(packed, bits, group_size)
+    return quantmod.dequantize_grouped(codes, zero, rng, bits, lv)
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    """Plain softmax attention oracle for the flash kernel.
+
+    q (BH, Sq, Dh), k/v (BH, Skv, Dh)."""
+    import jax
+    import numpy as np
+
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    if causal:
+        m = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(m[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rp_project(x2d, seed, d_out: int):
+    """x (M, D) @ R(seed) (D, d_out) — R materialized here, never in ops."""
+    return rpmod.rp(x2d, seed, d_out)
+
+
+def irp_project(x2d, seed, d_in: int):
+    """x (M, R) @ R(seed).T (R, d_in)."""
+    return rpmod.irp(x2d, seed, d_in)

@@ -1,0 +1,306 @@
+"""Loop-aware analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` and naive text grepping both count a ``while``
+body ONCE, but ``lax.scan`` over layers / grad-accum / attention chunks puts
+almost all compute inside whiles — so flops and collective bytes would be
+undercounted by factors of 10-100x.  This module parses the HLO text into
+computations, extracts each while's trip count (the s32 constant in its
+condition computation), and recursively accumulates:
+
+* ``dot_flops``      — 2 × result_elems × contracted_elems per dot, × trips
+* ``collectives``    — wire bytes per device by kind (ring-model factors:
+                       all-gather (g-1)/g · result, all-reduce 2(g-1)/g,
+                       reduce-scatter (g-1) · result, all-to-all (g-1)/g,
+                       collective-permute 1.0), × trips
+* ``hbm_bytes``      — Σ (result + operand bytes) of top-level (non-fused)
+                       instructions, × trips.  Fusion internals do not
+                       materialize; this is a reads+writes HBM traffic model
+                       (producer/consumer double count ≈ upper bound).
+
+Known caveats (documented in EXPERIMENTS.md): CPU-backend lowering converts
+some bf16 ops to f32 (inflates byte counts ~2x vs TPU); conditional branches
+are counted at the max of their branches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DT = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4, "s64": 8,
+       "u64": 8, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "pred": 1, "c64": 8,
+       "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_ARR_RE = re.compile(r"(" + "|".join(_DT) + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\((.*?)\)\s+->")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\]\{\},:\s]*?))(?:,\s|$)")
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def _arrays(shape_str: str):
+    """All (dtype, dims) arrays inside a shape string (handles tuples)."""
+    return [(_DT[d], [int(x) for x in dims.split(",") if x])
+            for d, dims in _ARR_RE.findall(shape_str)]
+
+
+def _bytes_of(shape_str: str) -> int:
+    total = 0
+    for bsz, dims in _arrays(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * bsz
+    return total
+
+
+def _elems_first_array(shape_str: str):
+    arrs = _arrays(shape_str)
+    if not arrs:
+        return None
+    return arrs[0][1]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str              # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict           # name -> shape str
+    instrs: list
+    is_entry: bool = False
+
+
+def parse_computations(text: str) -> tuple[dict, str]:
+    comps, cur, entry = {}, None, None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = _HEAD_RE.match(line)
+            if m:
+                params = {}
+                for pm in re.finditer(r"([\w\.\-]+):\s*([^,()]*(?:\([^)]*\))?[^,]*)",
+                                      m.group(3)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(2), params, [],
+                                  is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry = cur.name
+                continue
+        m = _INSTR_RE.match(line)
+        if m and cur is not None:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps, entry
+
+
+def _shape_table(comp: Computation) -> dict:
+    tab = dict(comp.params)
+    for ins in comp.instrs:
+        tab[ins.name] = ins.shape
+    return tab
+
+
+def _operand_names(rest: str) -> list[str]:
+    depth, i, head = 0, 0, []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        head.append(ch)
+        i += 1
+    return re.findall(r"%([\w\.\-]+)", "".join(head))
+
+
+def _group_size(rest: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant" and ins.shape.startswith("s32[]"):
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_CALL_ATTRS = ("calls=", "to_apply=", "body=", "condition=",
+               "branch_computations=", "true_computation=",
+               "false_computation=", "comparator=")
+
+
+def _called(rest: str) -> list[str]:
+    out = []
+    for attr in _CALL_ATTRS:
+        for m in re.finditer(re.escape(attr) + r"\{?%?([\w\.\-]+)", rest):
+            tok = m.group(1)
+            out.append((attr.rstrip("="), tok))
+        if attr == "branch_computations=":
+            m = re.search(r"branch_computations=\{([^}]*)\}", rest)
+            if m:
+                out = [(a, t) for a, t in out if a != "branch_computations"]
+                for tok in re.findall(r"%([\w\.\-]+)", m.group(1)):
+                    out.append(("branch_computations", tok))
+    return out
+
+
+def analyze(text: str, n_devices: int = 256) -> dict:
+    comps, entry = parse_computations(text)
+    memo = {}
+
+    def comp_cost(name: str, trip: int = 1) -> dict:
+        key = (name, trip)
+        if key in memo:
+            return memo[key]
+        memo[key] = {"flops": 0.0, "hbm": 0.0,
+                     "coll": {k: 0.0 for k in _COLL}}
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        tab = _shape_table(comp)
+        acc = {"flops": 0.0, "hbm": 0.0, "coll": {k: 0.0 for k in _COLL}}
+
+        def nbytes(shape_str: str) -> int:
+            """Byte size, charging loop-stacked buffers per-slice: inside a
+            while body with trip count T, an array whose leading dim == T is
+            scan xs/ys (or an in-place-updated stack) — each iteration only
+            touches bytes/T of it."""
+            total = 0
+            for bsz, dims in _arrays(shape_str):
+                n = 1
+                for d in dims:
+                    n *= d
+                b = n * bsz
+                if trip > 1 and dims and dims[0] == trip:
+                    b //= trip
+                total += b
+            return total
+
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "dot":
+                dims = _elems_first_array(ins.shape) or []
+                out_elems = 1
+                for d in dims:
+                    out_elems *= d
+                ops_ = _operand_names(ins.rest)
+                lhs_shape = tab.get(ops_[0], "") if ops_ else ""
+                ldims = _elems_first_array(lhs_shape) or []
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+                k_elems = 1
+                if m and ldims:
+                    for ci in m.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            k_elems *= ldims[int(ci)]
+                acc["flops"] += 2.0 * out_elems * k_elems
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLL and not op.endswith("-done"):
+                g = _group_size(ins.rest, n_devices)
+                comps_bytes = [b * _prod(d) for b, d in _arrays(ins.shape)]
+                if not comps_bytes:
+                    continue
+                big, small = max(comps_bytes), min(comps_bytes)
+                if base == "all-gather":
+                    wire = big * (g - 1) / g
+                elif base == "all-reduce":
+                    wire = big * 2 * (g - 1) / g
+                elif base == "reduce-scatter":
+                    wire = small * (g - 1)
+                elif base == "all-to-all":
+                    wire = big * (g - 1) / g
+                else:
+                    wire = big
+                acc["coll"][base] += wire
+            # HBM traffic: top-level instr results + operands (fused bodies
+            # don't materialize; 'fusion' result+operands counted here).
+            # Slicing/indexing ops only touch their RESULT-sized window —
+            # counting the full operand would charge each scan iteration for
+            # the whole stacked weight array (quadratic in depth).
+            if op in ("dynamic-slice", "gather", "slice"):
+                acc["hbm"] += 2 * nbytes(ins.shape)
+            elif op == "dynamic-update-slice":
+                ops_ = _operand_names(ins.rest)
+                upd = tab.get(ops_[1], "") if len(ops_) > 1 else ""
+                acc["hbm"] += 2 * nbytes(upd)
+            elif op == "scatter":
+                ops_ = _operand_names(ins.rest)
+                upd = tab.get(ops_[-1], "") if ops_ else ""
+                acc["hbm"] += 2 * nbytes(upd)
+            elif op not in ("parameter", "constant", "get-tuple-element",
+                            "tuple", "bitcast", "while", "conditional"):
+                b = nbytes(ins.shape)
+                for on in _operand_names(ins.rest)[:8]:
+                    b += nbytes(tab.get(on, ""))
+                acc["hbm"] += b
+            # recursion
+            called = _called(ins.rest)
+            if op == "while":
+                body = next((t for a, t in called if a == "body"), None)
+                cond = next((t for a, t in called if a == "condition"), None)
+                trips = _trip_count(comps, cond) if cond else 1
+                sub = comp_cost(body, trips) if body else None
+                if sub:
+                    acc["flops"] += sub["flops"] * trips
+                    acc["hbm"] += sub["hbm"] * trips
+                    for k in _COLL:
+                        acc["coll"][k] += sub["coll"][k] * trips
+            elif op == "conditional":
+                branches = [t for a, t in called
+                            if a in ("branch_computations", "true_computation",
+                                     "false_computation")]
+                if branches:
+                    subs = [comp_cost(b) for b in branches]
+                    best = max(subs, key=lambda s: s["flops"])
+                    acc["flops"] += best["flops"]
+                    acc["hbm"] += best["hbm"]
+                    for k in _COLL:
+                        acc["coll"][k] += best["coll"][k]
+            else:
+                for a, t in called:
+                    if a in ("calls", "to_apply"):
+                        # fusion/call body: flops + collectives flow up;
+                        # internal tensors do NOT materialize to HBM (the
+                        # fusion's own operands/result were counted above)
+                        sub = comp_cost(t)
+                        acc["flops"] += sub["flops"]
+                        for k in _COLL:
+                            acc["coll"][k] += sub["coll"][k]
+        memo[name] = acc
+        return acc
+
+    total = comp_cost(entry) if entry else {"flops": 0, "hbm": 0,
+                                            "coll": {k: 0 for k in _COLL}}
+    total = dict(total)
+    total["coll_total"] = sum(total["coll"].values())
+    total["n_computations"] = len(comps)
+    return total
+
+
+def _prod(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n

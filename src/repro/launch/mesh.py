@@ -1,0 +1,16 @@
+"""Production mesh builders (functions, never module-level constants — no
+jax device-state touch at import time)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the same axis names (CPU smoke / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,73 @@
+"""jit-able step functions: train (with gradient accumulation), prefill,
+decode.  These are what the dry-run lowers and what launch/train.py runs."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(model: Model, opt: AdamWConfig,
+                    accum_dtype=jnp.float32):
+    cfg = model.cfg
+
+    def loss_fn(params, mb, step):
+        return model.loss(
+            params, mb["tokens"],
+            prefix_embeds=mb.get("prefix_embeds"),
+            enc_embeds=mb.get("enc_embeds"),
+            act_seed=step.astype(jnp.uint32) * jnp.uint32(2654435761),
+            vocab_chunk=cfg.vocab_chunk)
+
+    def train_step(params, opt_state, batch):
+        step = opt_state["step"]
+        if cfg.grad_accum > 1:
+            a = cfg.grad_accum
+
+            def split(x):
+                return x.reshape(a, x.shape[0] // a, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def body(gsum, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb, step)
+                return jax.tree.map(
+                    lambda s, x: s + x.astype(accum_dtype), gsum, g), l
+
+            grads, losses = jax.lax.scan(body, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / a, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, step)
+        params, opt_state = adamw_update(grads, opt_state, params, opt)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_seq: int | None = None):
+    def prefill_step(params, batch):
+        return model.prefill(
+            params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            max_seq=max_seq)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One decode step: greedy next token + updated cache."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+
+    return serve_step

@@ -1,0 +1,113 @@
+"""End-to-end training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke \\
+      --steps 50 --act-mode act --ckpt-dir /tmp/run1
+
+Full configs need the production mesh (TPU pod); ``--smoke`` runs the
+reduced same-family config on local devices.  Auto-resumes from the last
+checkpoint in --ckpt-dir.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get, reduce_for_smoke
+from repro.core.compressor import CompressionConfig
+from repro.data import batch_for_step
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel import annotate
+from repro.parallel.sharding import batch_pspecs, param_pspecs, to_named
+from repro.runtime import StragglerMonitor, TrainRunner
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--act-mode", default=None,
+                    choices=[None, "none", "remat", "act"])
+    ap.add_argument("--act-bits", type=int, default=2)
+    ap.add_argument("--act-group", type=int, default=256)
+    ap.add_argument("--opt-bits", type=int, default=0, choices=[0, 8])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure (fault-tolerance demo/tests)")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    if args.act_mode:
+        comp = CompressionConfig(bits=args.act_bits, group_size=args.act_group)
+        cfg = dataclasses.replace(cfg, act_mode=args.act_mode,
+                                  act_compression=comp)
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh())
+    annotate.set_rules(**annotate.rules_for(cfg, mesh, args.batch))
+
+    model = Model(cfg)
+    opt = AdamWConfig(lr=args.lr, weight_decay=0.01, grad_clip=1.0,
+                      warmup_steps=min(20, args.steps // 5),
+                      state_bits=args.opt_bits)
+    train_step = make_train_step(model, opt)
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = adamw_init(params, opt)
+        jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+        def step_fn(state, batch):
+            params, opt_state = state
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            return (params, opt_state), metrics
+
+        def make_batch(step):
+            toks = batch_for_step(cfg.vocab, args.batch, args.seq, step)
+            b = {"tokens": jnp.asarray(toks)}
+            if cfg.family == "encdec":
+                b["enc_embeds"] = jax.random.normal(
+                    jax.random.PRNGKey(step), (args.batch, args.seq,
+                                               cfg.d_model), jnp.bfloat16)
+            if cfg.frontend == "vision":
+                b["prefix_embeds"] = jax.random.normal(
+                    jax.random.PRNGKey(step), (args.batch, cfg.frontend_len,
+                                               cfg.d_model), jnp.bfloat16)
+            return b
+
+        if args.ckpt_dir:
+            runner = TrainRunner(step_fn, make_batch, args.ckpt_dir,
+                                 ckpt_every=args.ckpt_every,
+                                 fail_at_step=args.fail_at,
+                                 monitor=StragglerMonitor())
+            state, hist = runner.run((params, opt_state), args.steps)
+            print(f"straggler events: {len(runner.monitor.events)}")
+        else:
+            state = (params, opt_state)
+            hist = []
+            for step in range(args.steps):
+                t0 = time.perf_counter()
+                state, m = step_fn(state, make_batch(step))
+                hist.append({"step": step, "loss": float(m["loss"]),
+                             "dt": time.perf_counter() - t0})
+        first, last = hist[0]["loss"], hist[-1]["loss"]
+        print(f"steps={len(hist)} loss {first:.4f} -> {last:.4f}")
+        return hist
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""GQA attention: online-softmax chunked training/prefill path + cached
+decode path.  Pure JAX — XLA fuses the streaming softmax; memory stays
+O(S · chunk) instead of O(S²), which is what lets prefill_32k compile
+inside a v5e HBM budget.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, rmsnorm
+from repro.parallel.annotate import shard
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, S, Hkv, Dh) -> (B, S, Hkv*n_rep, Dh)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+def online_attention(q, k, v, *, causal: bool, q_offset=0,
+                     kv_len=None, k_chunk: int = 1024):
+    """Streaming-softmax attention.
+
+    q: (B, Sq, H, Dh);  k, v: (B, Skv, H, Dh) (already GQA-expanded).
+    ``q_offset``: absolute position of q[0] (causal masking for decode /
+    chunked prefill).  ``kv_len``: #valid kv entries (cache may be padded).
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / np.sqrt(dh)
+    qf = (q * scale).astype(jnp.float32).transpose(0, 2, 1, 3)   # B,H,Sq,Dh
+    kf = k.astype(jnp.float32).transpose(0, 2, 3, 1)             # B,H,Dh,Skv
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)             # B,H,Skv,Dh
+    sp = "q_seq" if sq >= 2048 else None  # never split tiny/decode queries
+    qf = shard(qf, "batch", "heads", sp, None)
+    kf = shard(kf, "batch", "heads", None, None)
+    vf = shard(vf, "batch", "heads", None, None)
+
+    n_chunks = max(1, (skv + k_chunk - 1) // k_chunk)
+    pad = n_chunks * k_chunk - skv
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kf = kf.reshape(b, h, dh, n_chunks, k_chunk)
+    vf = vf.reshape(b, h, n_chunks, k_chunk, dh)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, c_idx = inputs
+        s = shard(jnp.einsum("bhqd,bhdk->bhqk", qf, kc),
+                  "batch", "heads", sp, None)
+        kv_pos = c_idx * k_chunk + jnp.arange(k_chunk)
+        mask = jnp.ones((sq, k_chunk), bool)
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if kv_len is not None:
+            mask = mask & (kv_pos[None, :] < kv_len)
+        else:
+            mask = mask & (kv_pos[None, :] < skv)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        m_new = shard(m_new, "batch", "heads", sp)
+        l = shard(l, "batch", "heads", sp)
+        acc = shard(acc, "batch", "heads", sp, None)
+        return (m_new, l, acc), None
+
+    init = (shard(jnp.full((b, h, sq), NEG_INF, jnp.float32),
+                  "batch", "heads", sp),
+            shard(jnp.zeros((b, h, sq), jnp.float32), "batch", "heads", sp),
+            shard(jnp.zeros((b, h, sq, dh), jnp.float32),
+                  "batch", "heads", sp, None))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init,
+        (kf.transpose(3, 0, 1, 2, 4), vf.transpose(2, 0, 1, 3, 4),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)          # B,Sq,H,Dh
+
+
+def qkv_project(x, p, cfg, positions):
+    """x (B,S,D) -> q (B,S,H,Dh), k/v (B,S,Hkv,Dh) with rope + qk-norm.
+
+    Projections are annotated on the FLATTENED out-dim (always model-
+    shardable when divisible); the head reshape then reshards as the
+    attention layout requires."""
+    b, s, _ = x.shape
+    q = shard(x @ p["wq"], "batch", None, "attn_out")
+    k = shard(x @ p["wk"], "batch", None, "kv_out")
+    v = shard(x @ p["wv"], "batch", None, "kv_out")
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(1, 1, cfg.n_heads, cfg.d_head).astype(q.dtype)
+        k = k + p["bk"].reshape(1, 1, cfg.n_kv_heads, cfg.d_head).astype(k.dtype)
+        v = v + p["bv"].reshape(1, 1, cfg.n_kv_heads, cfg.d_head).astype(v.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def attention_block(x, p, cfg, *, causal=True, k_chunk=1024):
+    """Full-sequence attention (training / prefill)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = qkv_project(x, p, cfg, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    out = online_attention(q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep),
+                           causal=causal, k_chunk=k_chunk)
+    out = shard(out.reshape(b, s, cfg.n_heads * cfg.d_head),
+                "batch", None, "attn_out")
+    return out @ p["wo"]
+
+
+def attention_decode(x, p, cfg, cache_k, cache_v, pos):
+    """One-token decode. x (B,1,D); cache (B,Smax,Hkv,Dh); pos (B,) int32.
+
+    DIRECT grouped-head attention (no KV repeat, no chunk scan): with the
+    cache sequence dim sharded over ``model``, scores stay sharded and only
+    the (B,Hkv,G,1)-sized softmax stats and output partials all-reduce —
+    vs. all-gathering the full cache per layer (§Perf iteration: cut decode
+    collective bytes by ~3 orders of magnitude).
+
+    Returns (out (B,1,D), new_k, new_v).
+    """
+    b = x.shape[0]
+    positions = pos[:, None]
+    q, k, v = qkv_project(x, p, cfg, positions)
+    cache_k = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0, 0)))(cache_k, k, pos)
+    cache_v = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0, 0)))(cache_v, v, pos)
+    smax = cache_k.shape[1]
+    hkv = cfg.n_kv_heads
+    g = cfg.n_heads // hkv
+    scale = 1.0 / np.sqrt(cfg.d_head)
+    qg = (q * scale).reshape(b, hkv, g, cfg.d_head).astype(jnp.float32)
+    kf = cache_k.astype(jnp.float32)                      # (B,S,Hkv,Dh)
+    vf = cache_v.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kf)             # (B,Hkv,G,S)
+    valid = jnp.arange(smax)[None, :] <= pos[:, None]     # (B,S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    pexp = jnp.exp(s - m)
+    l = pexp.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", pexp / l, vf)     # (B,Hkv,G,Dh)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+    return out @ p["wo"], cache_k, cache_v
+
+
+def cross_attention_block(x, p, cfg, enc_out):
+    """Decoder→encoder cross attention (no rope on encoder keys)."""
+    b, s, _ = x.shape
+    se = enc_out.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (enc_out @ p["wk"]).reshape(b, se, cfg.n_kv_heads, cfg.d_head)
+    v = (enc_out @ p["wv"]).reshape(b, se, cfg.n_kv_heads, cfg.d_head)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    out = online_attention(q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep),
+                           causal=False, k_chunk=1024)
+    return out.reshape(b, s, cfg.n_heads * cfg.d_head) @ p["wo"]

@@ -1,0 +1,62 @@
+"""Shared neural layers (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * inv * w).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+def rope_freqs(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (..., S, H, Dh), positions (..., S) int32."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d_head, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    from repro.parallel.annotate import shard
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    if h.ndim == 3:
+        h = shard(h, "batch", None, "dff")
+    return h @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    return jax.nn.gelu(x @ w_in + b_in, approximate=True) @ w_out + b_out
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.bfloat16, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d_model, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+def stack_layer_params(per_layer: list):
+    """[pytree_l0, pytree_l1, ...] -> pytree with leading layer axis (scan)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)

@@ -1,0 +1,91 @@
+"""Top-k MoE FFN with scatter-based per-sequence-capacity dispatch.
+
+TPU-native formulation (DESIGN.md §6): tokens scatter into a per-sequence
+``(E, C, D)`` expert buffer (k small scatters — no (S·k, D) token replication
+and no global sort), experts run as one batched einsum (MXU-friendly,
+EP-shardable: E lives on the ``model`` mesh axis), outputs gather back with
+renormalized gates.  Capacity is per sequence (GShard groups == sequences);
+overflow tokens drop to a dummy row, underflow rows are zero.
+
+Router math in fp32; aux load-balance loss returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.annotate import shard
+
+
+def capacity(seq_len: int, n_experts: int, top_k: int,
+             capacity_factor: float = 1.25, multiple: int = 8) -> int:
+    c = int(seq_len * top_k * capacity_factor / n_experts) + 1
+    return max(multiple, ((c + multiple - 1) // multiple) * multiple)
+
+
+def moe_ffn(x, p, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, norm_topk: bool = True):
+    """x (B, S, D) -> (y (B, S, D), aux_loss scalar).
+
+    p: router (D, E), w_gate/w_up (E, D, F), w_down (E, F, D).
+    """
+    b, s, d = x.shape
+    e, k = n_experts, top_k
+    c = capacity(s, e, k, capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,S,E)
+    gates, idx = jax.lax.top_k(probs, k)                          # (B,S,k)
+    if norm_topk:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch-style): E/k * Σ_e f_e · P_e
+    sel = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(2)        # (B,S,E)
+    f_e = sel.mean((0, 1))
+    p_e = probs.mean((0, 1))
+    aux = e / k * jnp.sum(f_e * p_e)
+
+    # position-in-expert per sequence, GATHER formulation: GSPMD shards
+    # batched gathers natively, while the scatter form forced an all-gather
+    # of the full (B,S,D) activations (§Perf cell-B iteration 2).
+    e_flat = idx.reshape(b, s * k)
+    order = jnp.argsort(e_flat, axis=1, stable=True)     # sorted-by-expert
+    inv = jnp.argsort(order, axis=1)                     # inverse perm
+    sorted_e = jnp.take_along_axis(e_flat, order, axis=1)
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e), side="left"))(sorted_e)
+    pos_sorted = jnp.arange(s * k)[None, :] - jnp.take_along_axis(
+        seg_start, sorted_e, axis=1)
+    pos = jnp.take_along_axis(pos_sorted, inv, axis=1).reshape(b, s, k)
+    keep = pos < c
+    slot = jnp.where(keep, idx * c + pos, e * c)                  # dummy = e*c
+
+    # dispatch: expert slot (e, pos) reads token order[seg_start[e]+pos]//k
+    flat_c = jnp.arange(e * c)
+    slot_e = flat_c // c                                          # (E*C,)
+    slot_pos = flat_c % c
+    sorted_idx = seg_start[:, slot_e] + slot_pos[None, :]         # (B, E*C)
+    seg_end = jnp.concatenate(
+        [seg_start[:, 1:], jnp.full((b, 1), s * k)], axis=1)
+    slot_valid = sorted_idx < seg_end[:, slot_e]
+    sorted_idx = jnp.minimum(sorted_idx, s * k - 1)
+    src_tok = jnp.take_along_axis(order, sorted_idx, axis=1) // k  # (B, E*C)
+    xe = jnp.take_along_axis(x, src_tok[:, :, None], axis=1)
+    xe = xe * slot_valid[:, :, None].astype(x.dtype)
+    xe = shard(xe.reshape(b, e, c, d), "batch", "experts", None, None)
+
+    # batched expert SwiGLU
+    h_gate = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+    h_up = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    hidden = shard(jax.nn.silu(h_gate) * h_up, "batch", "experts", None, None)
+    ye = shard(jnp.einsum("becf,efd->becd", hidden, p["w_down"]),
+               "batch", "experts", None, None)
+
+    # combine: gather each slot's output, gate-weight, sum over k
+    ye_flat = jnp.concatenate(
+        [ye.reshape(b, e * c, d), jnp.zeros((b, 1, d), ye.dtype)], axis=1)
+    y = jnp.zeros((b, s, d), jnp.float32)
+    for j in range(k):
+        yj = jnp.take_along_axis(ye_flat, slot[:, :, j][:, :, None], axis=1)
+        y = y + yj.astype(jnp.float32) * (gates[:, :, j] * keep[:, :, j])[..., None]
+    return y.astype(x.dtype), aux

@@ -1,0 +1,162 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training path: chunked SSD — intra-chunk quadratic attention-like term +
+inter-chunk recurrent state carried with ``lax.scan`` (linear in sequence
+length; this is why the ssm/hybrid archs run the ``long_500k`` shape that
+full attention skips).  Decode path: O(1) per-token state update.
+
+TPU/TP notes: projections are UNFUSED (w_z/w_x/w_B/w_C/w_dt) so the head
+dimension shards over the ``model`` mesh axis without slice/tile mismatch
+(a fused in_proj would put split boundaries mid-tile).  Heads (H, P) keep
+P on lanes; the state (B,H,P,N) einsums are MXU batched matmuls;
+n_groups = 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import rmsnorm
+from repro.parallel.annotate import shard
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    return d_inner, n_heads
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x (B,S,C), w (K,C), b (C)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i]
+    return out + b
+
+
+def ssd_chunked(xh, dt, a_neg, bmat, cmat, chunk: int = 128,
+                initial_state=None, return_state: bool = False):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P) head inputs; dt (B,S,H) post-softplus; a_neg (H,) negative;
+    bmat/cmat (B,S,N) (n_groups=1, broadcast over heads).
+    Returns (y (B,S,H,P), final_state (B,H,P,N) | None).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk}"
+    nc = s // chunk
+    xc = shard(xh.reshape(b, nc, chunk, h, p),
+               "batch", None, None, "ssm_heads", None)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    da = dtc * a_neg[None, None, None, :]                  # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(da, axis=2)                           # running log-decay
+    seg_end = cum[:, :, -1:, :]                            # (B,nc,1,H)
+
+    # intra-chunk: y_i += Σ_{j<=i} exp(cum_i - cum_j) dt_j (C_i·B_j) x_j
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    decay = shard(decay, "batch", None, None, None, "ssm_heads")
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)             # (B,nc,Q,Q)
+    w_ij = cb[..., None] * decay * dtc[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    y_intra = shard(
+        jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xc.astype(jnp.float32)),
+        "batch", None, None, "ssm_heads", None)
+
+    # chunk states: S_c = Σ_j exp(seg_end - cum_j) dt_j B_j ⊗ x_j (B,nc,H,P,N)
+    state_w = jnp.exp(seg_end - cum) * dtc                 # (B,nc,Q,H)
+    states = shard(
+        jnp.einsum("bcqh,bcqn,bcqhp->bchpn", state_w, bc,
+                   xc.astype(jnp.float32)),
+        "batch", None, "ssm_heads", None, None)
+
+    # inter-chunk recurrence over nc
+    seg_decay = jnp.exp(seg_end[:, :, 0, :])               # (B,nc,H)
+
+    def step(carry, inp):
+        st, dec = inp                                      # (B,H,P,N), (B,H)
+        prev = carry
+        new = shard(prev * dec[:, :, None, None] + st,
+                    "batch", "ssm_heads", None, None)
+        return new, prev                                   # emit state BEFORE chunk
+
+    init = shard(
+        jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+        else initial_state.astype(jnp.float32),
+        "batch", "ssm_heads", None, None)
+    final, prev_states = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     seg_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,N)
+
+    # y_inter_i = exp(cum_i) * C_i · S_prev
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp",
+                         jnp.exp(cum), cc, prev_states)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(xh.dtype), (final if return_state else None)
+
+
+def _project(x, p, cfg):
+    """Unfused projections + separate depthwise convs."""
+    z = x @ p["w_z"]
+    xi = causal_conv1d(x @ p["w_x"], p["conv_x"], p["conv_bx"])
+    bmat = causal_conv1d(x @ p["w_B"], p["conv_B"], p["conv_bB"])
+    cmat = causal_conv1d(x @ p["w_C"], p["conv_C"], p["conv_bC"])
+    xi, bmat, cmat = jax.nn.silu(xi), jax.nn.silu(bmat), jax.nn.silu(cmat)
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    return z, xi, bmat, cmat, dt
+
+
+def mamba2_block(x, p, cfg, chunk: int = 128, return_state: bool = False):
+    """Full Mamba-2 mixer. x (B,S,D) -> (B,S,D) [, final ssd state]."""
+    d_inner, n_heads = ssm_dims(cfg)
+    z, xi, bmat, cmat, dt = _project(x, p, cfg)
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xi.reshape(*xi.shape[:2], n_heads, cfg.ssm_headdim)
+    y, state = ssd_chunked(xh, dt, a_neg, bmat, cmat, chunk=chunk,
+                           return_state=return_state)
+    y = y + xh * p["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    return (out, state) if return_state else out
+
+
+def mamba2_decode(x, p, cfg, conv_state, ssd_state):
+    """One-token decode. x (B,1,D); conv_state (B,K-1,C_all);
+    ssd_state (B,H,P,N).  C_all = d_inner + 2N (x|B|C stacked).
+    Returns (y (B,1,D), conv_state, ssd_state)."""
+    d_inner, n_heads = ssm_dims(cfg)
+    n = cfg.ssm_state
+    x0 = x[:, 0]
+    z = x0 @ p["w_z"]
+    new_col = jnp.concatenate(
+        [x0 @ p["w_x"], x0 @ p["w_B"], x0 @ p["w_C"]], axis=-1)
+    window = jnp.concatenate([conv_state, new_col[:, None]], 1)  # (B,K,C_all)
+    conv_state = window[:, 1:]
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=1)
+    conv_b = jnp.concatenate([p["conv_bx"], p["conv_bB"], p["conv_bC"]])
+    col = jnp.einsum("bkc,kc->bc", window, conv_w) + conv_b
+    col = jax.nn.silu(col)
+    xi = col[:, :d_inner]
+    bmat = col[:, d_inner:d_inner + n].astype(jnp.float32)
+    cmat = col[:, d_inner + n:].astype(jnp.float32)
+    dt = jax.nn.softplus((x0 @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xi.reshape(-1, n_heads, cfg.ssm_headdim).astype(jnp.float32)
+    decay = jnp.exp(dt * a_neg)                            # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bmat)
+    ssd_state = ssd_state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssd_state, cmat)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(-1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return (y @ p["out_proj"])[:, None], conv_state, ssd_state

@@ -1,0 +1,646 @@
+"""Model zoo assembly: dense / MoE / SSM / hybrid / enc-dec / stub-frontend
+architectures from a single config, built for ``lax.scan`` over stacked
+layer weights (compile time O(1) in depth) and GSPMD sharding.
+
+Activation-compressed training (the paper's technique) plugs in per layer:
+``act_mode``:
+  * "none"  — autodiff saves everything
+  * "remat" — jax.checkpoint per layer
+  * "act"   — compressed_block: the layer input is stored RP+block-quantized
+              (INT2 by default) and the backward recomputes from the
+              reconstruction.  remat recomputes, ACT stores-compressed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.act_compress import compressed_block
+from repro.core.compressor import CompressionConfig
+from repro.models import attention as attn
+from repro.models import moe as moemod
+from repro.models import ssm as ssmmod
+from repro.models.layers import (dense_init, embed_init, rmsnorm,
+                                 stack_layer_params, swiglu)
+from repro.parallel.annotate import shard
+
+
+# ============================================================ param init
+def _attn_params(key, cfg, d_in=None):
+    d = d_in or cfg.d_model
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * cfg.d_head),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * cfg.d_head),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * cfg.d_head),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.d_head, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.d_head,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.d_head,), jnp.float32)
+    return p
+
+
+def _mlp_params(key, d_model, d_ff):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff),
+        "w_up": dense_init(ks[1], d_model, d_ff),
+        "w_down": dense_init(ks[2], d_ff, d_model),
+    }
+
+
+def _moe_params(key, cfg):
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    s = 1.0 / np.sqrt(d)
+    return {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * s
+                   ).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * s
+                   ).astype(jnp.bfloat16),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * s
+                 ).astype(jnp.bfloat16),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / np.sqrt(f)).astype(jnp.bfloat16),
+    }
+
+
+def _ssm_params(key, cfg):
+    d_inner, n_heads = ssmmod.ssm_dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 10)
+    conv = lambda k, c: (jax.random.normal(k, (cfg.ssm_conv, c), jnp.float32)
+                         * 0.2).astype(jnp.bfloat16)
+    return {
+        "w_z": dense_init(ks[0], cfg.d_model, d_inner),
+        "w_x": dense_init(ks[1], cfg.d_model, d_inner),
+        "w_B": dense_init(ks[2], cfg.d_model, n),
+        "w_C": dense_init(ks[3], cfg.d_model, n),
+        "w_dt": dense_init(ks[4], cfg.d_model, n_heads),
+        "conv_x": conv(ks[5], d_inner),
+        "conv_B": conv(ks[6], n),
+        "conv_C": conv(ks[7], n),
+        "conv_bx": jnp.zeros((d_inner,), jnp.float32),
+        "conv_bB": jnp.zeros((n,), jnp.float32),
+        "conv_bC": jnp.zeros((n,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[8], d_inner, cfg.d_model),
+    }
+
+
+def _dense_layer_params(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": _attn_params(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp": _mlp_params(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _moe_layer_params(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": _attn_params(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "moe": _moe_params(k2, cfg),
+    }
+    if cfg.dense_residual:
+        p["ln3"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["mlp"] = _mlp_params(k3, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _ssm_layer_params(key, cfg):
+    return {
+        "ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "mixer": _ssm_params(key, cfg),
+    }
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: object
+
+    # ------------------------------------------------------------ init
+    def init(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params = {"embed": embed_init(keys[0], cfg.vocab, cfg.d_model),
+                  "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+                  "lm_head": dense_init(keys[1], cfg.d_model, cfg.vocab)}
+        fam = cfg.family
+        lk = jax.random.split(keys[2], max(cfg.n_layers, 1))
+        if fam in ("dense", "vlm"):
+            params["layers"] = stack_layer_params(
+                [_dense_layer_params(k, cfg) for k in lk])
+        elif fam == "moe":
+            params["layers"] = stack_layer_params(
+                [_moe_layer_params(k, cfg) for k in lk])
+        elif fam == "ssm":
+            params["layers"] = stack_layer_params(
+                [_ssm_layer_params(k, cfg) for k in lk])
+        elif fam == "hybrid":
+            params["layers"] = stack_layer_params(
+                [_ssm_layer_params(k, cfg) for k in lk])
+            shared_cfg = dataclasses.replace(
+                cfg, d_model=2 * cfg.d_model,
+                d_head=2 * cfg.d_model // cfg.n_heads)
+            params["shared_attn"] = {
+                "ln": jnp.ones((2 * cfg.d_model,), jnp.float32),
+                "attn": _attn_params(keys[3], shared_cfg),
+                "ln2": jnp.ones((2 * cfg.d_model,), jnp.float32),
+                "mlp": _mlp_params(keys[4], 2 * cfg.d_model, cfg.d_ff),
+                "down": dense_init(keys[5], 2 * cfg.d_model, cfg.d_model),
+            }
+        elif fam == "encdec":
+            ek = jax.random.split(keys[3], cfg.encoder_layers)
+            params["enc_layers"] = stack_layer_params(
+                [_dense_layer_params(k, cfg) for k in ek])
+            params["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+            dk = jax.random.split(keys[4], cfg.n_layers)
+
+            def dec_layer(k):
+                k1, k2 = jax.random.split(k)
+                p = _dense_layer_params(k1, cfg)
+                p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+                p["xattn"] = _attn_params(k2, cfg)
+                return p
+
+            params["layers"] = stack_layer_params([dec_layer(k) for k in dk])
+        else:
+            raise ValueError(fam)
+        return params
+
+    # ---------------------------------------------------- layer wrapping
+    def _wrap(self, layer_fn):
+        """Apply act_mode around a layer fn f(x, (params, seed)) -> x."""
+        cfg = self.cfg
+        if cfg.act_mode == "act":
+            comp = cfg.act_compression or CompressionConfig(
+                bits=2, group_size=256, rp_ratio=0)
+
+            def f(x, ps):
+                p, seed = ps
+                return layer_fn(x, p)
+
+            wrapped = compressed_block(f, comp)
+            return lambda x, p, seed: wrapped(x, (p, seed), seed)
+        if cfg.act_mode == "remat":
+            ck = jax.checkpoint(layer_fn)
+            return lambda x, p, seed: ck(x, p)
+        return lambda x, p, seed: layer_fn(x, p)
+
+    # ------------------------------------------------------------ blocks
+    def _dense_layer(self, h, p, causal=True):
+        cfg = self.cfg
+        h = shard(h, "batch", None, None)
+        h = h + attn.attention_block(rmsnorm(h, p["ln1"]), p["attn"], cfg,
+                                     causal=causal, k_chunk=cfg.k_chunk)
+        m = p["mlp"]
+        h = h + swiglu(rmsnorm(h, p["ln2"]), m["w_gate"], m["w_up"],
+                       m["w_down"])
+        return shard(h, "batch", None, None)
+
+    def _moe_layer(self, h, p):
+        cfg = self.cfg
+        h = shard(h, "batch", None, None)
+        h = h + attn.attention_block(rmsnorm(h, p["ln1"]), p["attn"], cfg,
+                                     causal=True, k_chunk=cfg.k_chunk)
+        if cfg.dense_residual:
+            m = p["mlp"]
+            h = h + swiglu(rmsnorm(h, p["ln3"]), m["w_gate"], m["w_up"],
+                           m["w_down"])
+        y, aux = moemod.moe_ffn(rmsnorm(h, p["ln2"]), p["moe"],
+                                n_experts=cfg.n_experts, top_k=cfg.top_k,
+                                capacity_factor=cfg.moe_capacity_factor)
+        return shard(h + y, "batch", None, None), aux
+
+    def _ssm_layer(self, h, p):
+        h = shard(h, "batch", None, None)
+        return h + ssmmod.mamba2_block(rmsnorm(h, p["ln"]), p["mixer"],
+                                       self.cfg, chunk=self.cfg.ssm_chunk)
+
+    def _shared_attn_block(self, h, h0, p):
+        cfg = self.cfg
+        shared_cfg = dataclasses.replace(
+            cfg, d_model=2 * cfg.d_model,
+            d_head=2 * cfg.d_model // cfg.n_heads)
+        x = jnp.concatenate([h, h0], axis=-1)
+        x = x + attn.attention_block(rmsnorm(x, p["ln"]), p["attn"],
+                                     shared_cfg, causal=True,
+                                     k_chunk=cfg.k_chunk)
+        m = p["mlp"]
+        x = x + swiglu(rmsnorm(x, p["ln2"]), m["w_gate"], m["w_up"],
+                       m["w_down"])
+        return h + x @ p["down"]
+
+    # ------------------------------------------------------------ forward
+    def hidden_states(self, params, tokens, *, prefix_embeds=None,
+                      enc_embeds=None, act_seed=0):
+        """Token ids (+ optional stub-frontend prefix) -> final hidden (B,S,D).
+
+        Returns (h, aux_loss).  For encdec, ``enc_embeds`` (B,Se,D) is the
+        audio-frontend stub output and tokens are decoder ids.
+        """
+        cfg = self.cfg
+        h = jnp.take(params["embed"], tokens, axis=0)
+        if prefix_embeds is not None:
+            h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+        aux = jnp.zeros((), jnp.float32)
+        seed0 = jnp.asarray(act_seed, jnp.uint32)
+
+        if cfg.family in ("dense", "vlm"):
+            step = self._wrap(self._dense_layer)
+
+            def body(carry, xs):
+                lp, li = xs
+                return step(carry, lp, seed0 + li), None
+
+            h, _ = jax.lax.scan(body, h, (params["layers"],
+                                          jnp.arange(cfg.n_layers, dtype=jnp.uint32)))
+        elif cfg.family == "moe":
+            def moe_fn(x, p):
+                return self._moe_layer(x, p)
+
+            if cfg.act_mode == "remat":
+                moe_fn = jax.checkpoint(moe_fn)
+
+            def body(carry, xs):
+                hh, aa = carry
+                lp, li = xs
+                hh, a = moe_fn(hh, lp)
+                return (hh, aa + a), None
+
+            (h, aux), _ = jax.lax.scan(
+                body, (h, aux), (params["layers"],
+                                 jnp.arange(cfg.n_layers, dtype=jnp.uint32)))
+        elif cfg.family == "ssm":
+            step = self._wrap(self._ssm_layer)
+
+            def body(carry, xs):
+                lp, li = xs
+                return step(carry, lp, seed0 + li), None
+
+            h, _ = jax.lax.scan(body, h, (params["layers"],
+                                          jnp.arange(cfg.n_layers, dtype=jnp.uint32)))
+        elif cfg.family == "hybrid":
+            h0 = h
+            step = self._wrap(self._ssm_layer)
+            sites = cfg.shared_attn_sites()
+            start = 0
+            for si, site in enumerate(sites + [cfg.n_layers]):
+                seg = jax.tree.map(lambda a: a[start:site], params["layers"])
+                if site > start:
+                    def body(carry, xs):
+                        lp, li = xs
+                        return step(carry, lp, seed0 + li), None
+
+                    h, _ = jax.lax.scan(
+                        body, h,
+                        (seg, jnp.arange(start, site, dtype=jnp.uint32)))
+                if site < cfg.n_layers:
+                    h = self._shared_attn_block(h, h0, params["shared_attn"])
+                start = site
+        elif cfg.family == "encdec":
+            enc = enc_embeds.astype(h.dtype)
+
+            def enc_body(carry, lp):
+                return self._dense_layer(carry, lp, causal=False), None
+
+            enc_fn = enc_body
+            if cfg.act_mode in ("remat", "act"):
+                enc_fn = jax.checkpoint(enc_body)
+            enc, _ = jax.lax.scan(enc_fn, enc, params["enc_layers"])
+            enc = rmsnorm(enc, params["enc_norm"])
+
+            def dec_layer(x, p):
+                x = x + attn.attention_block(rmsnorm(x, p["ln1"]), p["attn"],
+                                             cfg, causal=True,
+                                             k_chunk=cfg.k_chunk)
+                x = x + attn.cross_attention_block(rmsnorm(x, p["ln_x"]),
+                                                   p["xattn"], cfg, enc)
+                m = p["mlp"]
+                return x + swiglu(rmsnorm(x, p["ln2"]), m["w_gate"],
+                                  m["w_up"], m["w_down"])
+
+            dfn = dec_layer
+            if cfg.act_mode in ("remat", "act"):
+                dfn = jax.checkpoint(dec_layer)
+
+            def dec_body(carry, lp):
+                return dfn(carry, lp), None
+
+            h, _ = jax.lax.scan(dec_body, h, params["layers"])
+        else:
+            raise ValueError(cfg.family)
+        return rmsnorm(h, params["final_norm"]), aux
+
+    def loss(self, params, tokens, *, prefix_embeds=None, enc_embeds=None,
+             act_seed=0, vocab_chunk: int = 4096):
+        """Next-token CE, vocab projection chunked over the sequence so the
+        (B, S, V) logits never materialize (beyond-paper memory saving)."""
+        cfg = self.cfg
+        h, aux = self.hidden_states(params, tokens,
+                                    prefix_embeds=prefix_embeds,
+                                    enc_embeds=enc_embeds, act_seed=act_seed)
+        npfx = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+        h_pred = h[:, npfx:npfx + tokens.shape[1] - 1]
+        targets = tokens[:, 1:]
+        s = h_pred.shape[1]
+        n_chunks = max(1, (s + vocab_chunk - 1) // vocab_chunk)
+        pad = n_chunks * vocab_chunk - s
+        if pad:
+            h_pred = jnp.pad(h_pred, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        hc = h_pred.reshape(h_pred.shape[0], n_chunks, vocab_chunk, -1)
+        tc = targets.reshape(targets.shape[0], n_chunks, vocab_chunk)
+        valid = (jnp.arange(n_chunks * vocab_chunk).reshape(n_chunks, vocab_chunk)
+                 < s)
+
+        @jax.checkpoint
+        def chunk_nll(hx, tx, vx):
+            logits = shard((hx @ params["lm_head"]).astype(jnp.float32),
+                           "batch", None, "vocab")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, tx[..., None], axis=-1)[..., 0]
+            return jnp.sum((lse - gold) * vx)
+
+        def body(acc, xs):
+            hx, tx, vx = xs
+            return acc + chunk_nll(hx, tx, vx), None
+
+        total, _ = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32),
+            (hc.transpose(1, 0, 2, 3), tc.transpose(1, 0, 2), valid))
+        nll = total / jnp.maximum(valid.sum() * h_pred.shape[0], 1)
+        return nll + cfg.aux_loss_weight * aux
+
+    # ------------------------------------------------------------ decode
+    def init_cache(self, batch: int, max_seq: int, enc_len: int = 0,
+                   dtype=jnp.bfloat16):
+        cfg = self.cfg
+        L = cfg.n_layers
+        kv = lambda: jnp.zeros((L, batch, max_seq, cfg.n_kv_heads,
+                                cfg.d_head), dtype)
+        cache = {"pos": jnp.zeros((batch,), jnp.int32)}
+        if cfg.family in ("dense", "vlm", "moe"):
+            cache["k"], cache["v"] = kv(), kv()
+        elif cfg.family == "ssm":
+            d_inner, n_heads = ssmmod.ssm_dims(cfg)
+            conv_ch = d_inner + 2 * cfg.ssm_state
+            cache["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch),
+                                      dtype)
+            cache["ssd"] = jnp.zeros((L, batch, n_heads, cfg.ssm_headdim,
+                                      cfg.ssm_state), jnp.float32)
+        elif cfg.family == "hybrid":
+            d_inner, n_heads = ssmmod.ssm_dims(cfg)
+            conv_ch = d_inner + 2 * cfg.ssm_state
+            cache["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch),
+                                      dtype)
+            cache["ssd"] = jnp.zeros((L, batch, n_heads, cfg.ssm_headdim,
+                                      cfg.ssm_state), jnp.float32)
+            ns = len(cfg.shared_attn_sites())
+            dh = 2 * cfg.d_model // cfg.n_heads
+            cache["shared_k"] = jnp.zeros(
+                (ns, batch, max_seq, cfg.n_kv_heads, dh), dtype)
+            cache["shared_v"] = jnp.zeros(
+                (ns, batch, max_seq, cfg.n_kv_heads, dh), dtype)
+        elif cfg.family == "encdec":
+            cache["k"], cache["v"] = kv(), kv()
+            cache["enc"] = jnp.zeros((batch, enc_len, cfg.d_model), dtype)
+        return cache
+
+    # ----------------------------------------------------------- prefill
+    def prefill(self, params, tokens, *, prefix_embeds=None, enc_embeds=None,
+                max_seq: int | None = None):
+        """Process a prompt, returning (last_logits (B,V), cache).
+
+        The compute profile of inference-prefill: full forward + KV/state
+        cache population.  ``max_seq`` sizes the cache (>= prompt length).
+        """
+        cfg = self.cfg
+        h = jnp.take(params["embed"], tokens, axis=0)
+        if prefix_embeds is not None:
+            h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+        b, s, _ = h.shape
+        max_seq = max_seq or s
+        pad_s = max_seq - s
+
+        def attn_collect(x, p, acfg):
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+            q, k, v = attn.qkv_project(x, p, acfg, positions)
+            n_rep = acfg.n_heads // acfg.n_kv_heads
+            out = attn.online_attention(
+                q, attn._repeat_kv(k, n_rep), attn._repeat_kv(v, n_rep),
+                causal=True, k_chunk=acfg.k_chunk)
+            out = shard(out.reshape(b, s, acfg.n_heads * acfg.d_head),
+                        "batch", None, "attn_out")
+            out = out @ p["wo"]
+            kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            return out, shard(kp, "batch", None, "kv_heads", None), \
+                shard(vp, "batch", None, "kv_heads", None)
+
+        cache = {"pos": jnp.full((b,), s, jnp.int32)}
+        if cfg.family in ("dense", "vlm", "moe"):
+            def body(carry, lp):
+                hh = shard(carry, "batch", None, None)
+                a, kp, vp = attn_collect(rmsnorm(hh, lp["ln1"]), lp["attn"],
+                                         cfg)
+                hh = hh + a
+                if cfg.family == "moe":
+                    if cfg.dense_residual:
+                        m = lp["mlp"]
+                        hh = hh + swiglu(rmsnorm(hh, lp["ln3"]), m["w_gate"],
+                                         m["w_up"], m["w_down"])
+                    y, _ = moemod.moe_ffn(rmsnorm(hh, lp["ln2"]), lp["moe"],
+                                          n_experts=cfg.n_experts,
+                                          top_k=cfg.top_k,
+                                          capacity_factor=cfg.moe_capacity_factor)
+                    hh = hh + y
+                else:
+                    m = lp["mlp"]
+                    hh = hh + swiglu(rmsnorm(hh, lp["ln2"]), m["w_gate"],
+                                     m["w_up"], m["w_down"])
+                return shard(hh, "batch", None, None), (kp, vp)
+
+            h, (cache["k"], cache["v"]) = jax.lax.scan(body, h,
+                                                       params["layers"])
+        elif cfg.family == "encdec":
+            enc = enc_embeds.astype(h.dtype)
+
+            def enc_body(carry, lp):
+                return self._dense_layer(carry, lp, causal=False), None
+
+            enc, _ = jax.lax.scan(enc_body, enc, params["enc_layers"])
+            cache["enc"] = rmsnorm(enc, params["enc_norm"])
+            L = cfg.n_layers
+            cache["k"] = jnp.zeros((L, b, max_seq, cfg.n_kv_heads,
+                                    cfg.d_head), h.dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+            cache["pos"] = jnp.zeros((b,), jnp.int32)
+        elif cfg.family in ("ssm", "hybrid"):
+            K = cfg.ssm_conv
+
+            def ssm_body(carry, lp):
+                hh = shard(carry, "batch", None, None)
+                x = rmsnorm(hh, lp["ln"])
+                y, state = ssmmod.mamba2_block(x, lp["mixer"], cfg,
+                                               chunk=cfg.ssm_chunk,
+                                               return_state=True)
+                tail = jnp.concatenate(
+                    [x @ lp["mixer"]["w_x"], x @ lp["mixer"]["w_B"],
+                     x @ lp["mixer"]["w_C"]], axis=-1)[:, s - (K - 1):]
+                return shard(hh + y, "batch", None, None), (tail, state)
+
+            if cfg.family == "ssm":
+                h, (cache["conv"], cache["ssd"]) = jax.lax.scan(
+                    ssm_body, h, params["layers"])
+            else:
+                h0 = h
+                sites = cfg.shared_attn_sites()
+                sp = params["shared_attn"]
+                shared_cfg = dataclasses.replace(
+                    cfg, d_model=2 * cfg.d_model,
+                    d_head=2 * cfg.d_model // cfg.n_heads)
+                convs, ssds, sks, svs = [], [], [], []
+                start = 0
+                for site in sites + [cfg.n_layers]:
+                    if site > start:
+                        seg = jax.tree.map(lambda a: a[start:site],
+                                           params["layers"])
+                        h, (cc, cs) = jax.lax.scan(ssm_body, h, seg)
+                        convs.append(cc)
+                        ssds.append(cs)
+                    if site < cfg.n_layers:
+                        x = jnp.concatenate([h, h0], axis=-1)
+                        a, kp, vp = attn_collect(rmsnorm(x, sp["ln"]),
+                                                 sp["attn"], shared_cfg)
+                        x = x + a
+                        m = sp["mlp"]
+                        x = x + swiglu(rmsnorm(x, sp["ln2"]), m["w_gate"],
+                                       m["w_up"], m["w_down"])
+                        h = h + x @ sp["down"]
+                        sks.append(kp)
+                        svs.append(vp)
+                    start = site
+                cache["conv"] = jnp.concatenate(convs, axis=0)
+                cache["ssd"] = jnp.concatenate(ssds, axis=0)
+                cache["shared_k"] = jnp.stack(sks)
+                cache["shared_v"] = jnp.stack(svs)
+        h = rmsnorm(h, params["final_norm"])
+        logits = (h[:, -1] @ params["lm_head"]).astype(jnp.float32)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B, 1) -> (logits (B, 1, V), cache)."""
+        cfg = self.cfg
+        h = jnp.take(params["embed"], tokens, axis=0)
+        pos = cache["pos"]
+
+        if cfg.family in ("dense", "vlm", "moe", "encdec"):
+            def body(carry, xs):
+                hh = carry
+                lp, ck, cv = xs
+                x = rmsnorm(hh, lp["ln1"])
+                a, ck, cv = attn.attention_decode(x, lp["attn"], cfg, ck, cv,
+                                                  pos)
+                hh = hh + a
+                if cfg.family == "encdec":
+                    hh = hh + attn.cross_attention_block(
+                        rmsnorm(hh, lp["ln_x"]), lp["xattn"], cfg,
+                        cache["enc"])
+                if cfg.family == "moe":
+                    if cfg.dense_residual:
+                        m = lp["mlp"]
+                        hh = hh + swiglu(rmsnorm(hh, lp["ln3"]), m["w_gate"],
+                                         m["w_up"], m["w_down"])
+                    y, _ = moemod.moe_ffn(rmsnorm(hh, lp["ln2"]), lp["moe"],
+                                          n_experts=cfg.n_experts,
+                                          top_k=cfg.top_k,
+                                          capacity_factor=cfg.moe_capacity_factor)
+                    hh = hh + y
+                else:
+                    m = lp["mlp"]
+                    hh = hh + swiglu(rmsnorm(hh, lp["ln2"]), m["w_gate"],
+                                     m["w_up"], m["w_down"])
+                return hh, (ck, cv)
+
+            h, (cache["k"], cache["v"]) = jax.lax.scan(
+                body, h, (params["layers"], cache["k"], cache["v"]))
+        elif cfg.family == "ssm":
+            def body(carry, xs):
+                hh = carry
+                lp, cc, cs = xs
+                y, cc, cs = ssmmod.mamba2_decode(rmsnorm(hh, lp["ln"]),
+                                                 lp["mixer"], cfg, cc, cs)
+                return hh + y, (cc, cs)
+
+            h, (cache["conv"], cache["ssd"]) = jax.lax.scan(
+                body, h, (params["layers"], cache["conv"], cache["ssd"]))
+        elif cfg.family == "hybrid":
+            h0 = h  # shared-block input concatenates the CURRENT token's
+            # embedding (matches the training path where h0 is the full
+            # embedding sequence)
+            sites = cfg.shared_attn_sites()
+            start = 0
+            sp = params["shared_attn"]
+            shared_cfg = dataclasses.replace(
+                cfg, d_model=2 * cfg.d_model,
+                d_head=2 * cfg.d_model // cfg.n_heads)
+            new_conv, new_ssd = [], []
+            for si, site in enumerate(sites + [cfg.n_layers]):
+                if site > start:
+                    seg = jax.tree.map(lambda a: a[start:site],
+                                       params["layers"])
+                    cc = cache["conv"][start:site]
+                    cs = cache["ssd"][start:site]
+
+                    def body(carry, xs):
+                        hh = carry
+                        lp, c1, c2 = xs
+                        y, c1, c2 = ssmmod.mamba2_decode(
+                            rmsnorm(hh, lp["ln"]), lp["mixer"], cfg, c1, c2)
+                        return hh + y, (c1, c2)
+
+                    h, (cc, cs) = jax.lax.scan(body, h, (seg, cc, cs))
+                    new_conv.append(cc)
+                    new_ssd.append(cs)
+                if site < cfg.n_layers:
+                    x = jnp.concatenate([h, h0], axis=-1)
+                    xl = rmsnorm(x, sp["ln"])
+                    a, ck, cv = attn.attention_decode(
+                        xl, sp["attn"], shared_cfg,
+                        cache["shared_k"][si], cache["shared_v"][si], pos)
+                    cache["shared_k"] = cache["shared_k"].at[si].set(ck)
+                    cache["shared_v"] = cache["shared_v"].at[si].set(cv)
+                    x = x + a
+                    m = sp["mlp"]
+                    x = x + swiglu(rmsnorm(x, sp["ln2"]), m["w_gate"],
+                                   m["w_up"], m["w_down"])
+                    h = h + x @ sp["down"]
+                start = site
+            cache["conv"] = jnp.concatenate(new_conv, axis=0)
+            cache["ssd"] = jnp.concatenate(new_ssd, axis=0)
+        cache["pos"] = pos + 1
+        h = rmsnorm(h, params["final_norm"])
+        return (h @ params["lm_head"]).astype(jnp.float32), cache
+
+
+def init_model(key, cfg):
+    m = Model(cfg)
+    return m, m.init(key)

@@ -1,0 +1,4 @@
+from repro.parallel.sharding import (batch_pspecs, cache_pspecs,
+                                     param_pspecs, to_named)
+
+__all__ = ["batch_pspecs", "cache_pspecs", "param_pspecs", "to_named"]

@@ -1,0 +1,77 @@
+"""Logical-axis activation sharding annotations.
+
+GSPMD's sharding propagation does not reliably survive ``lax.scan`` carries
+(observed: fully replicated attention in the layer scan), so — as in
+MaxText/Megatron-JAX practice — the model code annotates its major
+intermediates with *logical* axes which are resolved against the active
+mesh via rules installed by the launcher.  With no rules installed (unit
+tests, single-device runs) ``shard()`` is a no-op.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: dict = {}
+
+
+def set_rules(**mapping):
+    """e.g. set_rules(batch=("data",), heads="model", dff="model", ...)."""
+    global _RULES
+    _RULES = dict(mapping)
+
+
+def clear_rules():
+    global _RULES
+    _RULES = {}
+
+
+def rules_for(cfg, mesh, per_step_batch: int, *, is_train: bool = True):
+    """Standard rule set for an ArchConfig on a mesh (DESIGN.md §6).
+
+    ``is_train``: gradient accumulation divides the per-step batch into
+    microbatches only on the training path; prefill/decode see the full
+    batch."""
+    msz = mesh.shape.get("model", 1)
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    micro = (per_step_batch // max(cfg.grad_accum, 1) if is_train
+             else per_step_batch)
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads_ok = cfg.n_heads % msz == 0
+    return dict(
+        batch=dp if micro % dp_total == 0 else None,
+        heads="model" if heads_ok else None,
+        # context-parallel fallback: when heads don't divide the TP axis,
+        # shard the QUERY sequence over `model` (k/v all-gathered) instead
+        # of replicating attention 16x (beyond-paper sharding fix, §Perf)
+        q_seq=None if heads_ok else "model",
+        kv_heads="model" if cfg.n_kv_heads % msz == 0 else None,
+        # flattened projection out-dims: shardable whenever divisible, even
+        # when the head count itself is not (reshard happens at the reshape)
+        attn_out="model" if (cfg.n_heads * cfg.d_head) % msz == 0 else None,
+        kv_out="model" if (cfg.n_kv_heads * cfg.d_head) % msz == 0 else None,
+        dff="model" if cfg.d_ff % msz == 0 and cfg.d_ff else None,
+        experts="model" if cfg.n_experts % msz == 0 and cfg.n_experts else None,
+        vocab="model" if cfg.vocab % msz == 0 else None,
+        ssm_heads="model" if (d_inner // max(cfg.ssm_headdim, 1)) % msz == 0
+        else None,
+        cache_seq="model",
+        embed=None,
+    )
+
+
+def shard(x, *axes):
+    """Constrain ``x`` to the logical spec; no-op without installed rules."""
+    if not _RULES:
+        return x
+    spec = []
+    for a in axes:
+        r = _RULES.get(a) if a is not None else None
+        spec.append(r)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x  # outside a mesh context

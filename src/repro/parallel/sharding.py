@@ -1,0 +1,153 @@
+"""Sharding rules: TP (heads/d_ff/experts over ``model``) + FSDP (params
+over ``data``) + DP (batch over ``pod``×``data``) + sequence-sharded KV for
+long-context decode.  See DESIGN.md §6 for the full table.
+
+Divisibility policy: a dim shards over an axis only if it divides evenly;
+otherwise that dim stays replicated (e.g. 20-head or 56-head attention on a
+16-way model axis falls back to replicated attention weights — FSDP still
+shards them over ``data``).  Vocab dims likewise (92553, 256206, 50280 are
+odd-sized and stay unsharded on ``model``).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return n % _axis_size(mesh, axis) == 0
+
+
+def param_pspecs(cfg, params_shape, mesh):
+    """PartitionSpec pytree matching the params pytree (shape structs)."""
+    msz = _axis_size(mesh, "model")
+    dsz = _axis_size(mesh, "data")
+    heads_ok = cfg.n_heads % msz == 0
+    kv_ok = cfg.n_kv_heads % msz == 0
+
+    def fsdp(dim: int):
+        return "data" if dim % dsz == 0 else None
+
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1]
+        stacked = any(n in ("layers", "enc_layers") for n in names)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        shared = "shared_attn" in names
+
+        def out(*spec):
+            spec = list(spec) + [None] * (len(shape) - len(spec))
+            if stacked:
+                spec = [None] + spec
+            return P(*spec)
+
+        if name == "embed":
+            return out("model" if _div(shape[0], mesh, "model") else None,
+                       fsdp(shape[1]))
+        if name == "lm_head":
+            return out(fsdp(shape[0]),
+                       "model" if _div(shape[1], mesh, "model") else None)
+        if name in ("wq", "wk", "wv"):
+            # flattened out-dim sharding (divisibility, not head count)
+            return out(fsdp(shape[0]),
+                       "model" if _div(shape[1], mesh, "model") else None)
+        if name == "wo":
+            return out("model" if _div(shape[0], mesh, "model") else None,
+                       fsdp(shape[1]))
+        if name in ("w_gate", "w_up"):
+            if len(shape) == 3:                      # MoE experts (E, D, F)
+                return out("model" if _div(shape[0], mesh, "model") else None,
+                           fsdp(shape[1]), None)
+            return out(fsdp(shape[0]),
+                       "model" if _div(shape[1], mesh, "model") else None)
+        if name == "w_down":
+            if len(shape) == 3:                      # (E, F, D)
+                return out("model" if _div(shape[0], mesh, "model") else None,
+                           None, fsdp(shape[2]))
+            return out("model" if _div(shape[0], mesh, "model") else None,
+                       fsdp(shape[1]))
+        if name == "router":
+            return out(fsdp(shape[0]), None)
+        if name in ("w_z", "w_x"):
+            return out(fsdp(shape[0]),
+                       "model" if _div(shape[1], mesh, "model") else None)
+        if name == "w_dt":
+            return out(fsdp(shape[0]),
+                       "model" if _div(shape[1], mesh, "model") else None)
+        if name in ("w_B", "w_C"):
+            return out(fsdp(shape[0]), None)
+        if name == "conv_x":
+            return out(None, "model" if _div(shape[1], mesh, "model") else None)
+        if name in ("out_proj", "down"):
+            return out("model" if _div(shape[0], mesh, "model") else None,
+                       fsdp(shape[1]))
+        return out()  # norms, biases, scalars: replicated
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_pspecs(cfg, shape_kind: str, mesh, batch: int):
+    """Input-batch PartitionSpecs for train/prefill steps."""
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= _axis_size(mesh, a)
+    bspec = dp if batch % dp_total == 0 else None
+    spec = {"tokens": P(bspec, None)}
+    if cfg.family == "encdec":
+        spec["enc_embeds"] = P(bspec, None, None)
+    if cfg.frontend == "vision":
+        spec["prefix_embeds"] = P(bspec, None, None)
+    return spec
+
+
+def cache_pspecs(cfg, cache_shape, mesh, batch: int, seq: int):
+    """Decode-cache PartitionSpecs.
+
+    batch >= dp → batch over (pod, data), cache seq over model.
+    batch == 1 (long-context) → cache seq over (data, model); SSM state
+    heads over model.
+    """
+    dp = dp_axes(mesh)
+    msz = _axis_size(mesh, "model")
+    dp_total = 1
+    for a in dp:
+        dp_total *= _axis_size(mesh, a)
+    big_batch = batch % dp_total == 0
+    bspec = dp if big_batch else None
+    seq_axes = "model" if big_batch else (*dp, "model")
+
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1]
+        if name == "pos":
+            return P(None)
+        if name in ("k", "v", "shared_k", "shared_v"):
+            # (L|ns, B, S, Hkv, Dh)
+            s_ok = leaf.shape[2] % (msz * (1 if big_batch else dp_total)) == 0
+            return P(None, bspec, seq_axes if s_ok else None, None, None)
+        if name == "enc":
+            return P(bspec, None, None)
+        if name == "conv":
+            return P(None, bspec, None, None)
+        if name == "ssd":
+            # (L, B, H, P, N)
+            h_ok = leaf.shape[2] % msz == 0
+            return P(None, bspec, "model" if h_ok else None, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def to_named(pspec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import StragglerMonitor, TrainRunner
+
+__all__ = ["StragglerMonitor", "TrainRunner"]

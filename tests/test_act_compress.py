@@ -1,0 +1,98 @@
+"""custom_vjp compressed-training primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompressionConfig
+from repro.core.act_compress import (compressed_block, compressed_elementwise,
+                                     compressed_linear, compressed_matmul)
+
+CFG = CompressionConfig(bits=2, group_size=64)
+
+
+def test_forward_is_exact():
+    """Compression only affects what's SAVED — forward must be exact."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    np.testing.assert_allclose(
+        np.asarray(compressed_matmul(x, w, jnp.uint32(0), CFG)),
+        np.asarray(x @ w), rtol=1e-6)
+
+
+def test_dx_is_exact():
+    """dL/dx = g @ wT needs only w — must match the uncompressed grad."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    gc = jax.grad(lambda x: compressed_matmul(x, w, jnp.uint32(3), CFG).sum())(x)
+    ge = jax.grad(lambda x: (x @ w).sum())(x)
+    np.testing.assert_allclose(np.asarray(gc), np.asarray(ge), rtol=1e-5)
+
+
+def test_dw_unbiased():
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 64))
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 16))
+
+    def loss(w, s):
+        return (compressed_matmul(x, w, s, CFG) ** 2).sum()
+
+    ge = jax.grad(lambda w: ((x @ w) ** 2).sum())(w)
+    acc = jnp.zeros_like(w)
+    n = 300
+    for s in range(n):
+        acc = acc + jax.grad(loss)(w, jnp.uint32(s))
+    rel = float(jnp.linalg.norm(acc / n - ge) / jnp.linalg.norm(ge))
+    assert rel < 0.08, f"dw biased? rel={rel}"
+
+
+def test_compressed_linear_bias_grad():
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 16))
+    b = jnp.zeros((16,))
+    g = jax.grad(lambda b: compressed_linear(x, w, b, jnp.uint32(0), CFG).sum())(b)
+    np.testing.assert_allclose(np.asarray(g), 8.0, rtol=1e-6)
+
+
+def test_compressed_elementwise():
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 64)) * 2
+    y, vjp = jax.vjp(
+        lambda x: compressed_elementwise(jnp.tanh, x, jnp.uint32(1), CFG), x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.tanh(x)),
+                               rtol=1e-6)
+    (dx,) = vjp(jnp.ones_like(y))
+    # grad evaluated at the INT2 reconstruction: plumbing check (mean error
+    # bounded by tanh'' x bin width); unbiasedness is tested separately
+    ref = 1 - jnp.tanh(x) ** 2
+    assert float(jnp.abs(dx - ref).mean()) < 0.4
+
+
+def test_compressed_block_params_grad_flows():
+    def f(x, p):
+        return jnp.tanh(x @ p["w"]) @ p["v"]
+
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, 64))
+    p = {"w": jax.random.normal(jax.random.PRNGKey(8), (64, 32)),
+         "v": jax.random.normal(jax.random.PRNGKey(9), (32, 4))}
+    g = compressed_block(f, CFG)
+    grads = jax.grad(lambda p: g(x, p, jnp.uint32(0)).sum())(p)
+    assert all(jnp.isfinite(v).all() for v in jax.tree.leaves(grads))
+    assert float(jnp.abs(grads["w"]).sum()) > 0
+
+
+def test_compressed_block_under_scan():
+    """The transformer integration path: custom_vjp inside lax.scan."""
+    def f(x, p):
+        return jnp.tanh(x @ p)
+
+    g = compressed_block(f, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(10), (4, 64))
+    stack = jax.random.normal(jax.random.PRNGKey(11), (3, 64, 64)) * 0.1
+
+    def run(stack):
+        def body(h, p):
+            return g(h, p, jnp.uint32(0)), None
+        h, _ = jax.lax.scan(body, x, stack)
+        return (h ** 2).sum()
+
+    val, grads = jax.value_and_grad(run)(stack)
+    assert jnp.isfinite(val)
+    assert jnp.isfinite(grads).all()

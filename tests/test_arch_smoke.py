@@ -1,0 +1,105 @@
+"""Per-arch smoke tests (assignment requirement): reduced same-family
+config, one forward/train step on CPU, shapes + no-NaN assertions."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduce_for_smoke
+from repro.models import Model
+
+B, S = 2, 64
+
+
+def _inputs(r, key):
+    kwargs = {}
+    if r.family == "encdec":
+        kwargs["enc_embeds"] = jax.random.normal(key, (B, S, r.d_model),
+                                                 jnp.bfloat16)
+    if r.frontend == "vision":
+        kwargs["prefix_embeds"] = jax.random.normal(
+            key, (B, r.frontend_len, r.d_model), jnp.bfloat16)
+    return kwargs
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_train_step(name):
+    cfg = ARCHS[name]
+    r = reduce_for_smoke(cfg)
+    assert r.family == cfg.family
+    model = Model(r)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    tokens = jax.random.randint(key, (B, S), 0, r.vocab)
+    kwargs = _inputs(r, key)
+    loss, grads = jax.value_and_grad(model.loss)(params, tokens, **kwargs)
+    assert jnp.isfinite(loss), f"{name}: loss not finite"
+    for path, g in jax.tree_util.tree_leaves_with_path(grads):
+        assert jnp.isfinite(g).all(), f"{name}: NaN grad at {path}"
+    h, _ = model.hidden_states(params, tokens, **kwargs)
+    npfx = r.frontend_len if r.frontend == "vision" else 0
+    assert h.shape == (B, S + npfx, r.d_model)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_decode_step(name):
+    cfg = ARCHS[name]
+    r = reduce_for_smoke(cfg)
+    model = Model(r)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    cache = model.init_cache(B, 32, enc_len=S if r.family == "encdec" else 0)
+    if r.family == "encdec":
+        cache["enc"] = jax.random.normal(key, (B, S, r.d_model), jnp.bfloat16)
+    tok = jax.random.randint(key, (B, 1), 0, r.vocab)
+    for _ in range(3):
+        logits, cache = model.decode_step(params, cache, tok)
+        assert logits.shape == (B, 1, r.vocab)
+        assert jnp.isfinite(logits).all(), f"{name}: decode NaN"
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    assert int(cache["pos"][0]) == 3
+
+
+@pytest.mark.parametrize("name", ["qwen3-32b", "mamba2-780m"])
+def test_smoke_act_compression_mode(name):
+    """The paper's feature end-to-end inside a transformer."""
+    import dataclasses
+
+    from repro.core import CompressionConfig
+
+    r = reduce_for_smoke(ARCHS[name])
+    r = dataclasses.replace(r, act_mode="act", act_compression=
+                            CompressionConfig(bits=2, group_size=64))
+    model = Model(r)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    tokens = jax.random.randint(key, (B, S), 0, r.vocab)
+    loss, grads = jax.value_and_grad(model.loss)(params, tokens)
+    assert jnp.isfinite(loss)
+    assert all(jnp.isfinite(g).all() for g in jax.tree.leaves(grads))
+
+
+def test_configs_match_assignment():
+    """Exact architecture hyper-parameters from the assignment table."""
+    c = ARCHS["qwen3-moe-235b-a22b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (94, 4096, 64, 4)
+    assert (c.n_experts, c.top_k, c.vocab) == (128, 8, 151936)
+    c = ARCHS["arctic-480b"]
+    assert (c.n_layers, c.d_model, c.d_ff, c.top_k) == (35, 7168, 4864, 2)
+    assert c.dense_residual
+    c = ARCHS["qwen1.5-32b"]
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (64, 5120, 27392, 152064)
+    assert c.qkv_bias
+    c = ARCHS["mistral-nemo-12b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (40, 5120, 32, 8)
+    c = ARCHS["qwen3-32b"]
+    assert c.qk_norm and (c.n_heads, c.n_kv_heads) == (64, 8)
+    c = ARCHS["mamba2-780m"]
+    assert (c.n_layers, c.d_model, c.ssm_state) == (48, 1536, 128)
+    c = ARCHS["zamba2-1.2b"]
+    assert (c.n_layers, c.d_model, c.ssm_state) == (38, 2048, 64)
+    c = ARCHS["seamless-m4t-large-v2"]
+    assert (c.encoder_layers, c.n_layers, c.vocab) == (24, 24, 256206)
+    c = ARCHS["internvl2-2b"]
+    assert (c.n_layers, c.d_model, c.vocab) == (24, 2048, 92553)
+    c = ARCHS["qwen1.5-4b"]
+    assert (c.n_layers, c.d_model, c.d_ff) == (40, 2560, 6912)

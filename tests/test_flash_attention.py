@@ -1,0 +1,40 @@
+"""Flash-attention Pallas kernel vs softmax oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_call
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("bh,sq,skv,dh,causal,bq,bk", [
+    (4, 256, 256, 64, True, 128, 128),
+    (2, 256, 512, 64, False, 128, 128),
+    (2, 128, 128, 128, True, 64, 64),
+    (1, 512, 256, 64, False, 128, 64),
+])
+def test_flash_matches_oracle(bh, sq, skv, dh, causal, bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(bh + sq), 3)
+    q = jax.random.normal(ks[0], (bh, sq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (bh, skv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (bh, skv, dh), jnp.float32)
+    out = flash_attention_call(q, k, v, causal=causal, blk_q=bq, blk_k=bk,
+                               interpret=True)
+    expected = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_flash_bf16_inputs():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 128, 64), jnp.bfloat16)
+    out = flash_attention_call(q, k, v, causal=True, blk_q=64, blk_k=64,
+                               interpret=True)
+    expected = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        atol=3e-2, rtol=3e-2)
+    assert out.dtype == jnp.bfloat16

@@ -1,0 +1,79 @@
+"""MoE dispatch invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import swiglu
+from repro.models.moe import capacity, moe_ffn
+
+
+def _params(key, e, d, f, identical=False):
+    ks = jax.random.split(key, 4)
+    wg = jax.random.normal(ks[0], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[1], (e, d, f)) * 0.1
+    wd = jax.random.normal(ks[2], (e, f, d)) * 0.1
+    if identical:
+        wg = jnp.broadcast_to(wg[:1], wg.shape)
+        wu = jnp.broadcast_to(wu[:1], wu.shape)
+        wd = jnp.broadcast_to(wd[:1], wd.shape)
+    return {"router": jax.random.normal(ks[3], (d, e)) * 0.1,
+            "w_gate": wg, "w_up": wu, "w_down": wd}
+
+
+def test_identical_experts_equal_dense_ffn():
+    """With all experts identical and generous capacity, MoE == dense FFN."""
+    e, k, d, f = 8, 2, 32, 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, d))
+    p = _params(jax.random.PRNGKey(1), e, d, f, identical=True)
+    y, aux = moe_ffn(x, p, n_experts=e, top_k=k, capacity_factor=8.0)
+    y_ref = swiglu(x, p["w_gate"][0], p["w_up"][0], p["w_down"][0])
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_aux_loss_uniform_router_is_one():
+    """Perfectly balanced routing gives aux = E/k · k/E · ... = 1."""
+    e, k, d, f = 8, 2, 32, 64
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, d))
+    p = _params(jax.random.PRNGKey(3), e, d, f)
+    p = {**p, "router": jnp.zeros((d, e))}
+    _, aux = moe_ffn(x, p, n_experts=e, top_k=k, capacity_factor=8.0)
+    # ties in top_k with zero router logits pick arbitrary experts; f_e stays
+    # a permutation-invariant distribution summing to k... aux ~ 1
+    assert 0.5 < float(aux) < 2.0
+
+
+def test_capacity_rounding():
+    assert capacity(4096, 128, 8, 1.25) == 328
+    assert capacity(64, 8, 2, 1.0) % 8 == 0
+    assert capacity(1, 128, 8, 1.25) >= 8
+
+
+def test_moe_grads_finite_and_router_learns():
+    e, k, d, f = 8, 2, 32, 64
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 32, d))
+    p = _params(jax.random.PRNGKey(5), e, d, f)
+
+    def loss(p):
+        y, aux = moe_ffn(x, p, n_experts=e, top_k=k)
+        return (y ** 2).sum() + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert jnp.isfinite(leaf).all()
+    assert float(jnp.abs(g["router"]).sum()) > 0, "router got no gradient"
+
+
+def test_dropped_tokens_pass_through_zero():
+    """Capacity 'drops' must zero the expert contribution, not corrupt it."""
+    e, k, d, f = 4, 1, 16, 32
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 64, d))
+    p = _params(jax.random.PRNGKey(7), e, d, f)
+    # force everything to expert 0 with tiny capacity -> most tokens dropped
+    p = {**p, "router": jnp.zeros((d, e)).at[:, 0].set(100.0)}
+    y, _ = moe_ffn(x, p, n_experts=e, top_k=k, capacity_factor=0.1)
+    assert jnp.isfinite(y).all()
+    # some rows must be exactly zero (dropped)
+    row_norms = jnp.linalg.norm(y[0], axis=-1)
+    assert float(row_norms.min()) == 0.0

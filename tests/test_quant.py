@@ -1,0 +1,101 @@
+"""Core quantization properties: SR unbiasedness, error bounds, packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pack as packmod
+from repro.core import quant as quantmod
+from repro.core.compressor import CompressionConfig, compress, decompress
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("n", [1, 5, 32, 100])
+def test_pack_roundtrip_exact(bits, n):
+    codes = jnp.arange(n, dtype=jnp.int32) % (2**bits)
+    words = packmod.pack(codes, bits)
+    assert words.dtype == jnp.uint32
+    back = packmod.unpack(words, bits, n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 64))
+@settings(max_examples=20, deadline=None)
+def test_pack_roundtrip_property(seed, n):
+    rng = np.random.default_rng(seed)
+    for bits in (2, 4):
+        codes = jnp.asarray(rng.integers(0, 2**bits, n), jnp.int32)
+        back = packmod.unpack(packmod.pack(codes, bits), bits, n)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_sr_unbiased_uniform_levels():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 128)) * 2 + 0.3
+    cfg = CompressionConfig(bits=2, group_size=128)
+    mean = jnp.zeros_like(x)
+    n = 400
+    for s in range(n):
+        mean = mean + decompress(compress(x, cfg, s))
+    mean = mean / n
+    rel = float(jnp.abs(mean - x).max() / (x.max() - x.min()))
+    assert rel < 0.03, f"SR biased? rel={rel}"
+
+
+def test_sr_unbiased_vm_levels():
+    """Non-uniform (VM) levels must stay unbiased (paper App. A)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128))
+    cfg = CompressionConfig(bits=2, group_size=128, vm=True)
+    mean = jnp.zeros_like(x)
+    n = 400
+    for s in range(n):
+        mean = mean + decompress(compress(x, cfg, s))
+    mean = mean / n
+    rel = float(jnp.abs(mean - x).max() / (x.max() - x.min()))
+    assert rel < 0.03, f"VM SR biased? rel={rel}"
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quant_error_bounded_by_bin(bits):
+    """|x - dequant| <= max bin width (SR never rounds past a neighbor)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 64)) * 5
+    codes, zero, rng, _ = quantmod.quantize(x, bits, 64, seed=7)
+    xh = quantmod.dequantize(codes, zero, rng, bits, x.shape)
+    bin_w = rng / (2**bits - 1)
+    err = jnp.abs(xh - x)
+    assert float((err - bin_w[:, None] * 1.001).max()) <= 0
+
+
+def test_constant_block_exact():
+    x = jnp.full((2, 64), 3.14159)
+    cfg = CompressionConfig(bits=2, group_size=64)
+    xh = decompress(compress(x, cfg, 0))
+    np.testing.assert_allclose(np.asarray(xh), np.asarray(x), rtol=1e-6)
+
+
+def test_compressed_nbytes_shrinks_with_group_size():
+    """The paper's Table 1 memory trend: larger G -> smaller footprint."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (256, 256))
+    sizes = []
+    for g in (16, 32, 64, 128, 256):
+        ct = compress(x, CompressionConfig(bits=2, group_size=g), 0)
+        sizes.append(ct.nbytes)
+    assert all(a >= b for a, b in zip(sizes, sizes[1:])), sizes
+    # INT2 alone ~ 2/32 bits + block overhead
+    assert sizes[-1] < 0.08 * x.size * 4
+    # with the paper's D/R=8 random projection: >95% total reduction
+    ct = compress(x, CompressionConfig(bits=2, group_size=64, rp_ratio=8), 0)
+    assert ct.nbytes < 0.05 * x.size * 4
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_quant_dequant_idempotent_on_levels(seed):
+    """Values already at quantization levels survive exactly."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 4, (4, 64))
+    zero, span = -1.0, 2.0
+    x = jnp.asarray(zero + codes / 3.0 * span, jnp.float32)
+    c2, z2, r2, _ = quantmod.quantize(x, 2, 64, seed=seed)
+    xh = quantmod.dequantize(c2, z2, r2, 2, x.shape)
+    np.testing.assert_allclose(np.asarray(xh), np.asarray(x), atol=1e-5)

@@ -1,0 +1,111 @@
+"""Sharding-rule validity: every spec'd dim divides its mesh axis, and the
+rules express the intended TP/EP/FSDP layout (no devices needed — rules
+read only mesh.shape)."""
+import dataclasses
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, input_specs, reduce_for_smoke
+from repro.models import Model
+from repro.parallel.sharding import cache_pspecs, param_pspecs
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _axis_sizes(mesh, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for e in entry:
+        n *= mesh.shape[e]
+    return n
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["single", "multi"])
+def test_param_specs_divisible(arch, mesh):
+    cfg = ARCHS[arch]
+    model = Model(cfg)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_pspecs(cfg, params_shape, mesh)
+
+    def check(path, leaf, spec):
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            size = _axis_sizes(mesh, entry)
+            assert dim % size == 0, \
+                f"{arch} {path}: dim {dim} not divisible by {entry}={size}"
+
+    jax.tree_util.tree_map_with_path(
+        check, params_shape, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def test_tp_layout_dense():
+    cfg = ARCHS["qwen3-32b"]
+    model = Model(cfg)
+    ps = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_pspecs(cfg, ps, MESH1)
+    lay = specs["layers"]
+    assert tuple(lay["attn"]["wq"]) == (None, "data", "model")
+    assert tuple(lay["attn"]["wo"]) == (None, "model", "data")
+    assert tuple(lay["mlp"]["w_gate"]) == (None, "data", "model")
+    assert tuple(lay["mlp"]["w_down"]) == (None, "model", "data")
+    assert tuple(specs["lm_head"]) == ("data", "model")
+
+
+def test_ep_layout_moe():
+    cfg = ARCHS["qwen3-moe-235b-a22b"]
+    model = Model(cfg)
+    ps = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_pspecs(cfg, ps, MESH1)
+    moe = specs["layers"]["moe"]
+    assert tuple(moe["w_gate"]) == (None, "model", "data", None)   # EP + FSDP
+    assert tuple(moe["w_down"]) == (None, "model", None, "data")
+
+
+def test_nondivisible_vocab_replicated():
+    cfg = ARCHS["internvl2-2b"]        # vocab 92553 — not divisible by 16
+    model = Model(cfg)
+    ps = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = param_pspecs(cfg, ps, MESH1)
+    assert tuple(specs["embed"])[0] is None
+    assert tuple(specs["lm_head"])[1] is None
+
+
+def test_cache_specs_long_context():
+    cfg = ARCHS["zamba2-1.2b"]
+    model = Model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(1, 524288))
+    specs = cache_pspecs(cfg, cache, MESH1, batch=1, seq=524288)
+    sk = tuple(specs["shared_k"])
+    assert sk[2] == ("data", "model"), "long-ctx cache must shard sequence"
+    ssd = tuple(specs["ssd"])
+    assert ssd[2] == "model", "ssm state heads shard over model"
+
+
+def test_input_specs_all_cells():
+    """input_specs builds ShapeDtypeStructs for all 40 cells w/o allocation."""
+    n = 0
+    for arch, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            from repro.configs import cell_applicable
+            ok, _ = cell_applicable(cfg, shape)
+            if not ok:
+                continue
+            spec = input_specs(cfg, shape)
+            assert "tokens" in spec or "cache" in spec
+            n += 1
+    # 10 archs x 4 shapes = 40 cells, minus 8 full-attention long_500k skips
+    assert n == 32

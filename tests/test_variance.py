@@ -1,0 +1,67 @@
+"""Variance-minimization math (paper §3.2, App. A-C)."""
+import numpy as np
+import pytest
+
+from repro.core.variance import (clipped_normal_params, expected_sr_variance,
+                                 expected_sr_variance_uniform, js_divergence,
+                                 model_histogram, optimize_levels,
+                                 sr_variance, variance_reduction)
+
+
+def test_clipped_normal_params():
+    mu, sigma = clipped_normal_params(16, bits=2)
+    assert mu == 1.5
+    # mass below 0 is exactly 1/D by construction
+    from scipy.stats import norm
+    assert abs(norm.cdf(0, mu, sigma) - 1 / 16) < 1e-9
+
+
+def test_sr_variance_zero_at_levels():
+    levels = np.array([0.0, 1.1, 1.9, 3.0])
+    v = sr_variance(levels.copy(), levels)
+    np.testing.assert_allclose(v, 0.0, atol=1e-12)
+
+
+def test_sr_variance_max_at_bin_center():
+    levels = np.array([0.0, 1.0, 2.0, 3.0])
+    h = np.linspace(0.01, 0.99, 99)
+    v = sr_variance(h, levels)
+    assert abs(h[np.argmax(v)] - 0.5) < 0.02
+
+
+@pytest.mark.parametrize("D", [8, 16, 64, 256, 1024])
+def test_optimized_levels_beat_uniform(D):
+    lv = optimize_levels(D, 2)
+    assert lv[0] == 0.0 and lv[-1] == 3.0
+    assert all(a < b for a, b in zip(lv, lv[1:]))
+    vo = expected_sr_variance(lv, D, 2)
+    vu = expected_sr_variance_uniform(D, 2)
+    assert vo <= vu + 1e-12
+
+
+def test_variance_reduction_grows_with_D():
+    """Heavier clipping (larger D) -> more non-uniform optimum -> larger
+    reduction (matches paper Fig. 5 trend)."""
+    reds = [variance_reduction(d, 2) for d in (16, 64, 256)]
+    assert reds[0] < reds[-1]
+    assert 0.0 <= reds[0] < 0.5
+
+
+def test_optimal_levels_symmetric():
+    """CN is symmetric about B/2, so α* + β* ≈ B."""
+    lv = optimize_levels(128, 2)
+    assert abs((lv[1] + lv[2]) - 3.0) < 0.02
+
+
+def test_js_divergence_basic():
+    p = np.array([0.5, 0.5, 0.0])
+    assert js_divergence(p, p) < 1e-9
+    q = np.array([0.0, 0.0, 1.0])
+    assert js_divergence(p, q) > 0.5
+
+
+def test_model_histograms_normalized():
+    edges = np.linspace(0, 3, 61)
+    for kind in ("uniform", "clipnorm"):
+        h = model_histogram(64, 2, edges, kind)
+        assert abs(h.sum() - 1.0) < 1e-6
