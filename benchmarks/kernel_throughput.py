@@ -1,18 +1,34 @@
-"""Kernel micro-bench: quant/dequant/RP wall time (jnp path on CPU; the
-Pallas path runs in interpret mode and is correctness-only here) plus the
-bytes-moved model that determines TPU-side speedup."""
+"""Kernel micro-bench: quant/dequant/RP wall time plus the bytes-moved model
+that determines TPU-side speedup.
+
+Two tiers:
+
+* raw kernel calls (legacy rows, kept for trend continuity);
+* the *dispatched* public compressor API (``compress``/``decompress``)
+  swept over ``impl in {"jnp", "interp"}`` — this is the path training
+  actually runs, so the perf trajectory tracks the dispatch layer, not
+  hand-wired kernel calls.  Results land in ``BENCH_compressor.json``.
+
+On CPU the Pallas path runs in interpret mode and is correctness-priced
+only; the jnp rows are the meaningful CPU numbers.
+"""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import CompressionConfig, compress, decompress
 from repro.kernels import ops
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_compressor.json"
 
 
 def _time(f, *args, n=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    jax.block_until_ready(f(*args))  # compile + warm
     t0 = time.perf_counter()
     for _ in range(n):
         out = f(*args)
@@ -20,7 +36,7 @@ def _time(f, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def main():
+def _raw_kernel_rows():
     out = []
     for (nb, g) in ((4096, 256), (16384, 256), (4096, 1024)):
         x = jax.random.normal(jax.random.PRNGKey(0), (nb, g), jnp.float32)
@@ -46,6 +62,50 @@ def main():
     return out
 
 
+def _dispatched_compressor_rows(impls=("jnp", "interp")):
+    """Sweep the public compressor API across backends."""
+    rows, records = [], []
+    cases = [
+        ("int2_g256", CompressionConfig(bits=2, group_size=256), (4096, 256)),
+        ("int2_g256_vm", CompressionConfig(bits=2, group_size=256, vm=True),
+         (4096, 256)),
+        ("int2_g256_rp8", CompressionConfig(bits=2, group_size=256,
+                                            rp_ratio=8), (2048, 1024)),
+    ]
+    for tag, cfg, shape in cases:
+        x = jax.random.normal(jax.random.PRNGKey(7), shape, jnp.float32)
+        for impl in impls:
+            cf = jax.jit(lambda x, c=cfg, i=impl: compress(x, c, 7, impl=i))
+            us_c = _time(cf, x, n=3)
+            ct = cf(x)
+            df = jax.jit(decompress)
+            us_d = _time(df, ct, n=3)
+            derived = (f"impl={impl};stored_MB={ct.nbytes / 1e6:.3f};"
+                       f"ratio={ct.uncompressed_nbytes / ct.nbytes:.1f}x")
+            rows.append((f"compressor/{tag}/compress[{impl}]", us_c, derived))
+            rows.append((f"compressor/{tag}/decompress[{impl}]", us_d, ""))
+            records.append({
+                "case": tag, "impl": impl, "shape": list(shape),
+                "bits": cfg.bits, "group_size": cfg.group_size,
+                "rp_ratio": cfg.rp_ratio, "vm": cfg.vm,
+                "compress_us": us_c, "decompress_us": us_d,
+                "stored_bytes": ct.nbytes,
+                "uncompressed_bytes": ct.uncompressed_nbytes,
+            })
+    return rows, records
+
+
+def main(json_path: pathlib.Path | str | None = JSON_PATH):
+    rows = _raw_kernel_rows()
+    dispatched, records = _dispatched_compressor_rows()
+    rows += dispatched
+    if json_path:
+        payload = {"backend": jax.default_backend(), "records": records}
+        pathlib.Path(json_path).write_text(json.dumps(payload, indent=2))
+    return rows
+
+
 if __name__ == "__main__":
     for name, us, derived in main():
         print(f"{name},{us:.1f},{derived}")
+    print(f"# wrote {JSON_PATH}")

@@ -1,5 +1,7 @@
 """Benchmark driver: one harness per paper table/figure + system benches.
-Prints ``name,us_per_call,derived`` CSV."""
+Prints ``name,us_per_call,derived`` CSV; the kernel suite additionally
+sweeps the dispatched compressor API over ``impl in {jnp, interp}`` and
+drops ``BENCH_compressor.json`` next to the repo root."""
 from __future__ import annotations
 
 import sys
@@ -14,7 +16,7 @@ def main() -> None:
     suites = [
         ("fig3", fig3_variance_surface.main),
         ("fig5", fig5_vm_dimensionality.main),
-        ("kernel", kernel_throughput.main),
+        ("kernel", kernel_throughput.main),  # also writes BENCH_compressor.json
         ("table2", table2_distribution.main),
         ("lm_act", lm_act_compression.main),
         ("table1", table1_gnn.main),

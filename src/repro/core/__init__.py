@@ -1,4 +1,11 @@
-"""i-EXACT core: block-wise SR quantization + RP + variance minimization."""
+"""i-EXACT core: block-wise SR quantization + RP + variance minimization.
+
+Execution strategy (reference jnp vs fused Pallas kernels) is owned by
+:mod:`repro.core.backend`; flip it per-config via ``CompressionConfig.impl``
+or globally at trace time via :func:`use_impl`.
+"""
+from repro.core import backend
+from repro.core.backend import resolve_impl, use_impl
 from repro.core.compressor import (
     CompressionConfig,
     CompressedTensor,
@@ -21,9 +28,9 @@ from repro.core.variance import (
 )
 
 __all__ = [
-    "CompressionConfig", "CompressedTensor", "compress", "decompress",
-    "compressed_block", "compressed_elementwise", "compressed_linear",
-    "compressed_matmul", "clipped_normal_params", "expected_sr_variance",
-    "expected_sr_variance_uniform", "js_divergence", "optimize_levels",
-    "variance_reduction",
+    "CompressionConfig", "CompressedTensor", "backend", "compress",
+    "decompress", "compressed_block", "compressed_elementwise",
+    "compressed_linear", "compressed_matmul", "clipped_normal_params",
+    "expected_sr_variance", "expected_sr_variance_uniform", "js_divergence",
+    "optimize_levels", "resolve_impl", "use_impl", "variance_reduction",
 ]

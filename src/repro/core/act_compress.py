@@ -12,6 +12,12 @@ Three integration levels, lowest to highest:
   this is how transformer layers integrate under ``lax.scan``).
 
 Seeds are threaded as uint32 scalars; their cotangents are float0.
+
+Kernel backend: every primitive honors ``cfg.impl`` (routed through
+:mod:`repro.core.backend`), and the residual ``CompressedTensor`` records
+the concrete backend it was written with, so the backward pass decompresses
+on the same path even across ``custom_vjp`` residuals and scan carries.
+A ``backend.use_impl`` context at trace time overrides all of it.
 """
 from __future__ import annotations
 

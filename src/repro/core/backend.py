@@ -1,0 +1,210 @@
+"""Kernel-backend dispatch for the whole compression stack.
+
+This module owns the *execution strategy* of every compress/decompress
+primitive.  Callers (``core.compressor``, and through it the GNN models,
+the transformer ``compressed_block`` path and the benchmarks) never pick a
+kernel themselves — they name an ``impl`` and this layer routes:
+
+  * ``"jnp"``     — the pure-jnp reference path (``repro.kernels.ref``)
+  * ``"interp"``  — Pallas interpret mode (CPU validation of the kernels)
+  * ``"pallas"``  — real Pallas lowering (the TPU deployment path)
+  * ``"auto"``    — pallas on TPU, jnp elsewhere; unsupported shapes fall
+                    back to jnp instead of erroring
+
+All impls produce **bit-identical packed words** for quantize+pack (the SR
+noise is a counter hash and the strided pack layout is shared; see
+``tests/test_backend.py`` for the parity gate).  Random projection is a
+float matmul, so impls agree to float tolerance, not bit-exactly — RP
+routing is therefore best-effort: shapes that don't meet the Pallas tile
+constraints silently use the jnp matmul.
+
+Static-argument discipline: VM level tables are normalized to *hashable
+tuples of python floats* before they reach ``pallas_call`` (the kernels
+unroll them into compare/select chains).  Passing a traced array as a
+level table is an error by construction.
+
+``use_impl`` installs a trace-time override (operator switch) that takes
+precedence over per-config ``impl`` fields.  It affects *tracing* — an
+already-compiled jit executable is not retraced when the override changes.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quantmod
+from repro.kernels import ops
+
+VALID_IMPLS = ("auto", "jnp", "interp", "pallas")
+
+_OVERRIDE: list[str] = []  # stack managed by use_impl()
+
+
+def _check_impl(impl: str) -> str:
+    if impl not in VALID_IMPLS:
+        raise ValueError(f"impl={impl!r} not in {VALID_IMPLS}")
+    return impl
+
+
+@contextlib.contextmanager
+def use_impl(impl: str | None):
+    """Trace-time backend override; ``None`` is a no-op (plumbing-friendly)."""
+    if impl is None:
+        yield
+        return
+    _OVERRIDE.append(_check_impl(impl))
+    try:
+        yield
+    finally:
+        _OVERRIDE.pop()
+
+
+def current_override() -> str | None:
+    return _OVERRIDE[-1] if _OVERRIDE else None
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Concrete impl after applying the ``use_impl`` override and ``auto``."""
+    impl = _check_impl(_OVERRIDE[-1] if _OVERRIDE else impl)
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return impl
+
+
+def available_impl(impl: str) -> str:
+    """Downgrade a *recorded* concrete impl to one runnable on this host.
+
+    ``CompressedTensor.impl`` may say "pallas" in a checkpoint written on
+    TPU; all impls are bit-identical, so restoring on a CPU host should
+    quietly re-route through ``auto`` rather than fail to lower.
+    """
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        return "auto"
+    return impl
+
+
+# ------------------------------------------------------------- level tables
+# Single definition lives next to the kernels (the consumer that makes the
+# static-tuple requirement real); re-exported here as the public name.
+normalize_levels = ops.static_levels
+
+
+# ----------------------------------------------------------------- routing
+def quant_kernel_unsupported(bits: int, group_size: int,
+                             levels) -> str | None:
+    """Why the fused quant kernel can't run this config (None = it can)."""
+    if 32 % bits:
+        return f"bits={bits} does not divide 32"
+    vpw = 32 // bits
+    if group_size % vpw:
+        return (f"group_size={group_size} is not a multiple of the "
+                f"{vpw} codes-per-word pack width")
+    if levels is not None and len(levels) > 16:
+        return (f"VM table has {len(levels)} levels; the unrolled kernel "
+                "chain supports at most 16 (bits <= 4)")
+    return None
+
+
+def route_quant(impl: str, bits: int, group_size: int, levels=None) -> str:
+    """Concrete impl for quantize/dequantize.
+
+    ``auto`` falls back to jnp when the kernel can't run the config; an
+    *explicitly* requested kernel impl raises instead — the parity contract
+    must never be silently narrowed.
+    """
+    requested = _check_impl(_OVERRIDE[-1] if _OVERRIDE else impl)
+    concrete = resolve_impl(requested)
+    if concrete == "jnp":
+        return "jnp"
+    reason = quant_kernel_unsupported(bits, group_size,
+                                      normalize_levels(levels))
+    if reason is None:
+        return concrete
+    if requested == "auto":
+        return "jnp"
+    raise ValueError(f"impl={requested!r} cannot run this config: {reason}")
+
+
+def rp_kernel_unsupported(d_in: int, d_out: int, *, tn: int = 128,
+                          tk: int = 128) -> str | None:
+    if d_out % tn or d_in % tk:
+        return (f"rp dims ({d_in}->{d_out}) not multiples of the "
+                f"({tk},{tn}) tile")
+    return None
+
+
+def route_rp(impl: str, d_in: int, d_out: int, *, tn: int = 128,
+             tk: int = 128) -> str:
+    """Concrete impl for RP/IRP — best-effort (jnp fallback, never raises).
+
+    RP across impls agrees to float tolerance only (matmul accumulation
+    order), so forcing a kernel here buys no bit-parity; shapes off the
+    tile grid quietly take the reference matmul.
+    """
+    concrete = resolve_impl(impl)
+    if concrete == "jnp":
+        return "jnp"
+    if rp_kernel_unsupported(d_in, d_out, tn=tn, tk=tk):
+        return "jnp"
+    return concrete
+
+
+# ------------------------------------------------------------ block helpers
+def to_blocks(x: jnp.ndarray, group_size: int) -> tuple[jnp.ndarray, int]:
+    """Flatten + regroup into (n_blocks, G) with replicate tail padding.
+
+    The *within-block* tail is padded by replicating the last element
+    (cannot widen the final block's [min, max] envelope — zeros would).
+    Whole-row padding to the kernel tile (``ops._pad_rows``) happens below
+    this layer and only ever appends fake blocks that are sliced off, so
+    real block stats are never contaminated.
+    """
+    return quantmod.group_reshape(x, group_size)
+
+
+def from_blocks(blocks: jnp.ndarray, shape: tuple[int, ...],
+                dtype=jnp.float32) -> jnp.ndarray:
+    """Drop tail padding and restore the original shape."""
+    n = 1
+    for s in shape:
+        n *= s
+    return blocks.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+# -------------------------------------------------------------- primitives
+def quantize_blocks(blocks, bits: int, seed, levels=None, *,
+                    impl: str = "auto", rows_per_tile: int = 8):
+    """(n_blocks, G) f32 -> (packed u32, zero (n,), rng (n,))."""
+    concrete = route_quant(impl, bits, blocks.shape[-1], levels)
+    return ops.quantize_packed(blocks, bits, seed, normalize_levels(levels),
+                               impl=concrete, rows_per_tile=rows_per_tile)
+
+
+def dequantize_blocks(packed, zero, rng, bits: int, group_size: int,
+                      levels=None, *, impl: str = "auto",
+                      rows_per_tile: int = 8):
+    """(packed, zero (n,), rng (n,)) -> (n_blocks, G) f32."""
+    concrete = route_quant(impl, bits, group_size, levels)
+    return ops.dequantize_packed(packed, zero, rng, bits, group_size,
+                                 normalize_levels(levels), impl=concrete,
+                                 rows_per_tile=rows_per_tile)
+
+
+def rp(x, seed, d_out: int, *, impl: str = "auto"):
+    """Project the last dim D -> d_out (any leading rank)."""
+    d_in = x.shape[-1]
+    concrete = route_rp(impl, d_in, d_out)
+    lead = x.shape[:-1]
+    out = ops.rp_project(x.reshape(-1, d_in), seed, d_out, impl=concrete)
+    return out.reshape(*lead, d_out)
+
+
+def irp(x, seed, d_in: int, *, impl: str = "auto"):
+    """Recover the last dim r -> d_in (any leading rank)."""
+    r = x.shape[-1]
+    concrete = route_rp(impl, d_in, r)  # kernel reads (d_in x r) transposed
+    lead = x.shape[:-1]
+    out = ops.irp_project(x.reshape(-1, r), seed, d_in, impl=concrete)
+    return out.reshape(*lead, d_in)

@@ -4,18 +4,24 @@
 codes + per-block (zero, range) + the RP seed if random projection was used.
 It is a registered pytree so it can sit in ``custom_vjp`` residuals, scan
 carries, and checkpoints.
+
+Execution strategy is owned by :mod:`repro.core.backend` — this module is a
+thin orchestrator: RP → fused quantize+pack → store on the way in, and
+unpack+dequantize → IRP on the way back.  ``CompressionConfig.impl`` (or a
+``backend.use_impl`` override) flips the whole stack between the pure-jnp
+reference and the fused Pallas kernels; every impl writes bit-identical
+packed words, and the tensor records the concrete backend it was written
+with so decompress round-trips under ``custom_vjp`` residuals, scan
+carries, and checkpoints even if the override has since been lifted.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import pack as packmod
-from repro.core import quant as quantmod
-from repro.core import random_projection as rpmod
+from repro.core import backend
 from repro.core.variance import optimize_levels
 
 
@@ -30,6 +36,9 @@ class CompressionConfig:
     vm          use variance-minimized non-uniform levels (paper §3.2).
     vm_dim      D parameter of CN_[1/D] for level optimization; defaults to
                 the quantization block size (paper App. C uses the row dim).
+    impl        kernel backend: "auto" | "jnp" | "interp" | "pallas"
+                (see :mod:`repro.core.backend`).  One flag flips an entire
+                training job between reference and fused kernels.
     """
 
     bits: int = 2
@@ -37,12 +46,17 @@ class CompressionConfig:
     rp_ratio: int = 0
     vm: bool = False
     vm_dim: int | None = None
+    impl: str = "auto"
 
     def levels(self) -> tuple[float, ...] | None:
         if not self.vm:
             return None
         d = self.vm_dim or self.group_size
         return optimize_levels(int(d), self.bits)
+
+    def with_impl(self, impl: str) -> "CompressionConfig":
+        """Same compression scheme on a different kernel backend."""
+        return dataclasses.replace(self, impl=impl)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -56,15 +70,17 @@ class CompressedTensor:
     shape: tuple[int, ...]     # original (pre-RP) shape
     dtype: object
     cfg: CompressionConfig
+    impl: str = "auto"         # concrete backend the codes were written with
 
     def tree_flatten(self):
         return (self.packed, self.zero, self.rng, self.rp_seed), (
-            self.shape, str(jnp.dtype(self.dtype)), self.cfg)
+            self.shape, str(jnp.dtype(self.dtype)), self.cfg, self.impl)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        shape, dtype, cfg = aux
-        return cls(*children, shape=shape, dtype=jnp.dtype(dtype), cfg=cfg)
+        shape, dtype, cfg, impl = aux
+        return cls(*children, shape=shape, dtype=jnp.dtype(dtype), cfg=cfg,
+                   impl=impl)
 
     @property
     def nbytes(self) -> int:
@@ -86,30 +102,46 @@ def _proj_shape(shape: tuple[int, ...], rp_ratio: int) -> tuple[int, ...]:
     return (*shape[:-1], d // rp_ratio)
 
 
-def compress(x: jnp.ndarray, cfg: CompressionConfig, seed) -> CompressedTensor:
-    """Forward-pass compression: (optional RP) → block-wise SR quant → pack."""
+def compress(x: jnp.ndarray, cfg: CompressionConfig, seed,
+             impl: str | None = None) -> CompressedTensor:
+    """Forward-pass compression: (optional RP) → fused block SR quant+pack.
+
+    ``impl`` overrides ``cfg.impl`` for this call; a ``backend.use_impl``
+    context overrides both.
+    """
     seed = jnp.asarray(seed, jnp.uint32)
     orig_shape, orig_dtype = tuple(x.shape), x.dtype
     rp_seed = seed ^ jnp.uint32(0xA5A5_A5A5)
-    if cfg.rp_ratio > 1:
-        x = rpmod.rp(x.astype(jnp.float32), rp_seed, x.shape[-1] // cfg.rp_ratio)
+    requested = impl if impl is not None else cfg.impl
     levels = cfg.levels()
-    lv = None if levels is None else jnp.asarray(levels, jnp.float32)
-    codes, zero, rng, _ = quantmod.quantize(
-        x.astype(jnp.float32), cfg.bits, cfg.group_size, seed, lv)
-    packed = packmod.pack(codes, cfg.bits)
+    if cfg.rp_ratio > 1:
+        x = backend.rp(x.astype(jnp.float32), rp_seed,
+                       x.shape[-1] // cfg.rp_ratio, impl=requested)
+    impl_q = backend.route_quant(requested, cfg.bits, cfg.group_size, levels)
+    blocks, _ = backend.to_blocks(x.astype(jnp.float32), cfg.group_size)
+    packed, zero, rng = backend.quantize_blocks(
+        blocks, cfg.bits, seed, levels, impl=impl_q)
     return CompressedTensor(packed, zero, rng, rp_seed,
-                            shape=orig_shape, dtype=orig_dtype, cfg=cfg)
+                            shape=orig_shape, dtype=orig_dtype, cfg=cfg,
+                            impl=impl_q)
 
 
-def decompress(ct: CompressedTensor) -> jnp.ndarray:
-    """Backward-pass recovery: unpack → dequant → (optional IRP)."""
+def decompress(ct: CompressedTensor, impl: str | None = None) -> jnp.ndarray:
+    """Backward-pass recovery: unpack+dequant → (optional IRP).
+
+    Defaults to the concrete backend the tensor was compressed with
+    (``ct.impl``), downgraded to one runnable on this host — all impls are
+    bit-identical, so a pallas-written checkpoint restores fine on CPU.  A
+    ``backend.use_impl`` context still takes precedence.
+    """
     cfg = ct.cfg
+    requested = impl if impl is not None else backend.available_impl(ct.impl)
     proj_shape = _proj_shape(ct.shape, cfg.rp_ratio)
     levels = cfg.levels()
-    lv = None if levels is None else jnp.asarray(levels, jnp.float32)
-    codes = packmod.unpack(ct.packed, cfg.bits, cfg.group_size)
-    x = quantmod.dequantize(codes, ct.zero, ct.rng, cfg.bits, proj_shape, lv)
+    blocks = backend.dequantize_blocks(
+        ct.packed, ct.zero, ct.rng, cfg.bits, cfg.group_size, levels,
+        impl=requested)
+    x = backend.from_blocks(blocks, proj_shape)
     if cfg.rp_ratio > 1:
-        x = rpmod.irp(x, ct.rp_seed, ct.shape[-1])
+        x = backend.irp(x, ct.rp_seed, ct.shape[-1], impl=requested)
     return x.astype(ct.dtype)

@@ -26,7 +26,12 @@ import jax.numpy as jnp
 
 from repro.core.prng import uniform_from_counter
 
-_EPS = 1e-10
+#: Shared clamp constant for zero-width ranges / bins.  Both the jnp path
+#: (:func:`quantize_grouped`) and the fused Pallas kernels
+#: (:mod:`repro.kernels.quant_blockwise`) import this single definition so the
+#: two implementations cannot drift apart bit-wise.
+EPS = 1e-10
+_EPS = EPS  # backward-compat alias
 
 
 def uniform_levels(bits: int) -> jnp.ndarray:
@@ -53,7 +58,12 @@ def group_reshape(x: jnp.ndarray, group_size: int) -> tuple[jnp.ndarray, int]:
 
 
 def block_stats(blocks: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """(zero, range) per block; range is clamped away from 0 for constants."""
+    """(zero, range) per block — the *raw* stats, exactly as stored.
+
+    The range of a constant block is 0 here; consumers that divide by it
+    (:func:`quantize_grouped` and the fused kernels) clamp with the shared
+    :data:`EPS` at the point of use, so the stored range stays exact.
+    """
     zero = blocks.min(axis=-1)
     rng = blocks.max(axis=-1) - zero
     return zero, rng

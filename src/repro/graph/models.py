@@ -8,6 +8,11 @@ Compression placement matches EXACT/i-EXACT exactly:
 * ReLU saves a packed 1-bit sign mask (:func:`relu_1bit`), never the tensor;
 * the sparse aggregation ``Â·`` is linear in H — its VJP needs only the edge
   list and weights, so it stores no float activations at all.
+
+The compress/decompress execution strategy is picked by
+``CompressionConfig.impl`` (see :mod:`repro.core.backend`);
+:meth:`GNNConfig.with_impl` flips a whole training job between the
+reference and fused kernel backends with bit-identical codes.
 """
 from __future__ import annotations
 
@@ -58,6 +63,17 @@ class GNNConfig:
     n_classes: int = 40
     compression: CompressionConfig | None = None
     dropout: float = 0.0
+
+    def with_impl(self, impl: str) -> "GNNConfig":
+        """Same model, compression routed through a different kernel backend.
+
+        No-op on an uncompressed config — fp32 baselines stay valid inside
+        backend sweeps (there is no compression stack to reroute).
+        """
+        if self.compression is None:
+            return self
+        return dataclasses.replace(
+            self, compression=self.compression.with_impl(impl))
 
 
 def _dims(cfg: GNNConfig, in_dim: int):

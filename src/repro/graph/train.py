@@ -29,8 +29,16 @@ def _accuracy(params, graph, labels, mask, cfg):
 
 def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
               n_epochs: int = 100, seed: int = 0, eval_every: int = 10,
-              verbose: bool = False):
-    """Returns dict(test_acc, val_acc, history, epochs_per_sec, params)."""
+              verbose: bool = False, impl: str | None = None):
+    """Returns dict(test_acc, val_acc, history, epochs_per_sec, params).
+
+    ``impl`` (optional) reroutes the compression stack onto a specific
+    kernel backend for the whole job — "jnp" | "interp" | "pallas" | "auto"
+    (see :mod:`repro.core.backend`); codes are bit-identical across impls.
+    Ignored when ``cfg.compression`` is None (fp32 baseline).
+    """
+    if impl is not None:
+        cfg = cfg.with_impl(impl)
     opt = opt or AdamWConfig(lr=5e-3, weight_decay=0.0)
     key = jax.random.PRNGKey(seed)
     params = init_gnn_params(key, cfg, g.n_feats)

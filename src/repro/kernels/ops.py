@@ -25,7 +25,38 @@ def _resolve(impl: str) -> str:
     return impl
 
 
+def static_levels(levels):
+    """Coerce a VM level table to a static hashable tuple of floats.
+
+    The kernels unroll the table into compare/select chains at trace time —
+    it must be a compile-time constant; a traced array here would silently
+    bake in garbage or fail deep inside Pallas, so reject it with a usable
+    error instead.  This is the single definition (``core.backend``
+    re-exports it as ``normalize_levels``) so the jnp and Pallas paths
+    cannot drift.
+    """
+    if levels is None:
+        return None
+    if isinstance(levels, jax.core.Tracer):
+        raise TypeError(
+            "VM level tables must be static (tuple of floats), not traced "
+            "arrays — pass CompressionConfig.levels() through unchanged.")
+    if isinstance(levels, (tuple, list)):
+        return tuple(float(l) for l in levels)
+    import numpy as np
+
+    return tuple(float(l) for l in np.asarray(levels).reshape(-1))
+
+
 def _pad_rows(x, multiple: int):
+    """Zero-pad whole rows up to ``multiple``.
+
+    Rows are quantization *blocks*: padding only appends fake blocks whose
+    stats live entirely in the sliced-off region ``[n:]`` — it can never
+    touch a real block's (zero, range).  Within-block tail padding (which
+    CAN widen the last real block's envelope if done with zeros) is the
+    caller's job via replicate-padding, see ``core.backend.to_blocks``.
+    """
     n = x.shape[0]
     pad = (-n) % multiple
     if pad:
@@ -37,6 +68,7 @@ def quantize_packed(x2d, bits: int, seed, levels=None, *, impl: str = "auto",
                     rows_per_tile: int = 8):
     """(n_blocks, G) -> (packed u32, zero (n,), rng (n,))."""
     impl = _resolve(impl)
+    levels = static_levels(levels)
     if impl == "jnp":
         return refmod.quantize_packed(x2d, bits, seed, levels)
     xp, n = _pad_rows(x2d, rows_per_tile)
@@ -51,6 +83,7 @@ def dequantize_packed(packed, zero, rng, bits: int, group_size: int,
                       rows_per_tile: int = 8):
     """(packed, zero (n,), rng (n,)) -> (n_blocks, G) f32."""
     impl = _resolve(impl)
+    levels = static_levels(levels)
     if impl == "jnp":
         return refmod.dequantize_packed(packed, zero, rng, bits, group_size, levels)
     p, n = _pad_rows(packed, rows_per_tile)

@@ -25,8 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.prng import uniform_from_counter
-
-_EPS = 1e-10
+from repro.core.quant import EPS as _EPS  # single shared clamp constant
 
 
 def _sr_codes(h, u, bits: int, levels):

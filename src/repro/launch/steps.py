@@ -7,21 +7,27 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend
 from repro.models import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
 def make_train_step(model: Model, opt: AdamWConfig,
-                    accum_dtype=jnp.float32):
+                    accum_dtype=jnp.float32, act_impl: str | None = None):
+    """``act_impl`` pins the activation-compression kernel backend for the
+    whole step ("jnp" | "interp" | "pallas" | "auto"); None defers to the
+    config's ``act_compression.impl``.  Applied at trace time via
+    :func:`repro.core.backend.use_impl`."""
     cfg = model.cfg
 
     def loss_fn(params, mb, step):
-        return model.loss(
-            params, mb["tokens"],
-            prefix_embeds=mb.get("prefix_embeds"),
-            enc_embeds=mb.get("enc_embeds"),
-            act_seed=step.astype(jnp.uint32) * jnp.uint32(2654435761),
-            vocab_chunk=cfg.vocab_chunk)
+        with backend.use_impl(act_impl):
+            return model.loss(
+                params, mb["tokens"],
+                prefix_embeds=mb.get("prefix_embeds"),
+                enc_embeds=mb.get("enc_embeds"),
+                act_seed=step.astype(jnp.uint32) * jnp.uint32(2654435761),
+                vocab_chunk=cfg.vocab_chunk)
 
     def train_step(params, opt_state, batch):
         step = opt_state["step"]

@@ -40,6 +40,10 @@ def main(argv=None):
                     choices=[None, "none", "remat", "act"])
     ap.add_argument("--act-bits", type=int, default=2)
     ap.add_argument("--act-group", type=int, default=256)
+    ap.add_argument("--act-impl", default="auto",
+                    choices=["auto", "jnp", "interp", "pallas"],
+                    help="kernel backend for the compression stack "
+                         "(core.backend dispatch; 'auto' = pallas on TPU)")
     ap.add_argument("--opt-bits", type=int, default=0, choices=[0, 8])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -52,7 +56,8 @@ def main(argv=None):
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
     if args.act_mode:
-        comp = CompressionConfig(bits=args.act_bits, group_size=args.act_group)
+        comp = CompressionConfig(bits=args.act_bits, group_size=args.act_group,
+                                 impl=args.act_impl)
         cfg = dataclasses.replace(cfg, act_mode=args.act_mode,
                                   act_compression=comp)
 
@@ -64,7 +69,8 @@ def main(argv=None):
     opt = AdamWConfig(lr=args.lr, weight_decay=0.01, grad_clip=1.0,
                       warmup_steps=min(20, args.steps // 5),
                       state_bits=args.opt_bits)
-    train_step = make_train_step(model, opt)
+    act_impl = None if args.act_impl == "auto" else args.act_impl
+    train_step = make_train_step(model, opt, act_impl=act_impl)
 
     with mesh:
         params = model.init(jax.random.PRNGKey(0))

@@ -3,7 +3,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on clean environments
+    # Tiny deterministic fallback so the property tests still run (over a
+    # fixed sample grid) when hypothesis isn't installed.
+    import random as _random
+
+    class _IntStrategy:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class st:  # noqa: N801 - mimics hypothesis.strategies
+        @staticmethod
+        def integers(min_value, max_value):
+            return _IntStrategy(min_value, max_value)
+
+    def given(*strategies):
+        def deco(fn):
+            # NB: zero-arg wrapper (no functools.wraps) so pytest doesn't
+            # mistake the property arguments for fixtures.
+            def wrapper():
+                rng = _random.Random(0)
+                for _ in range(10):
+                    fn(*(s.sample(rng) for s in strategies))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(**_kwargs):
+        return lambda fn: fn
 
 from repro.core import pack as packmod
 from repro.core import quant as quantmod
