@@ -1,0 +1,73 @@
+"""Batched-GNN smoke benchmark: the mini-batch subgraph engine vs the
+full-graph loop — epochs/sec and peak saved-activation bytes at equal
+compression config, swept over ``impl in {jnp, interp}``.
+
+Results land in ``BENCH_gnn_batched.json`` next to the repo root (same
+convention as ``BENCH_compressor.json``).  On CPU the throughput column
+measures interpreter overhead, not the paper's bandwidth effect; the
+hardware-independent claim this bench tracks is the *peak* byte model —
+one padded batch live at a time instead of the whole graph.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core import CompressionConfig
+from repro.graph import (GNNConfig, activation_memory_report, arxiv_like,
+                         make_subgraph_batches, train_gnn, train_gnn_batched)
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_gnn_batched.json"
+
+
+def run(scale: float = 0.02, epochs: int = 20, n_parts: int = 4,
+        hidden=(64, 64), impls=("jnp", "interp"), interp_epochs: int = 4):
+    g = arxiv_like(scale=scale)
+    comp = CompressionConfig(bits=2, group_size=256, rp_ratio=8)
+    batches = make_subgraph_batches(g, n_parts, method="bfs", seed=0)
+    data = {"graph": {"name": g.name, "n_nodes": g.n_nodes,
+                      "n_edges": g.n_edges, "n_parts": n_parts}}
+    for impl in impls:
+        cfg = GNNConfig(arch="sage", hidden=hidden,
+                        n_classes=g.num_classes, compression=comp)
+        ep = interp_epochs if impl == "interp" else epochs
+        full = train_gnn(g, cfg, n_epochs=ep, seed=0, impl=impl)
+        bat = train_gnn_batched(g, cfg, n_parts, n_epochs=ep, seed=0,
+                                impl=impl, batches=batches)
+        rep = activation_memory_report(g, cfg, n_parts=n_parts,
+                                       batch_nodes=bat["batch_nodes"])
+        data[impl] = {
+            "epochs": ep,
+            "full_epochs_per_sec": full["epochs_per_sec"],
+            "batched_epochs_per_sec": bat["epochs_per_sec"],
+            "full_test_acc": full["test_acc"],
+            "batched_test_acc": bat["test_acc"],
+            "full_saved_bytes": rep["compressed_bytes"],
+            "peak_saved_bytes": rep["batched"]["peak_saved_bytes"],
+            "peak_reduction_vs_full":
+                rep["batched"]["peak_reduction_vs_full"],
+        }
+    JSON_PATH.write_text(json.dumps(data, indent=2))
+    return data
+
+
+def main(fast: bool = True):
+    data = run(scale=0.01 if fast else 0.02, epochs=10 if fast else 40,
+               interp_epochs=3 if fast else 8)
+    out = []
+    for impl, d in data.items():
+        if impl == "graph":
+            continue
+        for mode in ("full", "batched"):
+            us = 1e6 / max(d[f"{mode}_epochs_per_sec"], 1e-9)
+            out.append((
+                f"gnn_batched/{impl}/{mode}", us,
+                f"acc={d[f'{mode}_test_acc']:.4f};"
+                f"peak_MB={d['peak_saved_bytes'] / 1e6:.2f};"
+                f"peak_red={d['peak_reduction_vs_full']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,7 +1,8 @@
 """Benchmark driver: one harness per paper table/figure + system benches.
 Prints ``name,us_per_call,derived`` CSV; the kernel suite additionally
 sweeps the dispatched compressor API over ``impl in {jnp, interp}`` and
-drops ``BENCH_compressor.json`` next to the repo root."""
+drops ``BENCH_compressor.json`` next to the repo root, and the gnn_batched
+suite drops ``BENCH_gnn_batched.json`` (mini-batch vs full-graph engine)."""
 from __future__ import annotations
 
 import sys
@@ -10,8 +11,9 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig3_variance_surface, fig5_vm_dimensionality,
-                            kernel_throughput, lm_act_compression, roofline,
-                            table1_gnn, table2_distribution)
+                            gnn_batched, kernel_throughput,
+                            lm_act_compression, roofline, table1_gnn,
+                            table2_distribution)
 
     suites = [
         ("fig3", fig3_variance_surface.main),
@@ -20,6 +22,7 @@ def main() -> None:
         ("table2", table2_distribution.main),
         ("lm_act", lm_act_compression.main),
         ("table1", table1_gnn.main),
+        ("gnn_batched", gnn_batched.main),  # writes BENCH_gnn_batched.json
         ("roofline", roofline.main),
     ]
     print("name,us_per_call,derived")

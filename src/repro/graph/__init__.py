@@ -1,10 +1,17 @@
-"""GNN substrate: the paper's own experimental domain (GCN / GraphSAGE)."""
+"""GNN substrate: the paper's own experimental domain (GCN / GraphSAGE),
+full-graph and partition-sampled mini-batch training."""
 from repro.graph.data import Graph, arxiv_like, flickr_like, synthetic_graph
 from repro.graph.models import GNNConfig, gnn_forward, init_gnn_params
-from repro.graph.train import train_gnn, activation_memory_report
+from repro.graph.sampling import (SubgraphBatch, bfs_partition,
+                                  make_subgraph_batches, random_partition,
+                                  stack_batches)
+from repro.graph.train import (activation_memory_report, train_gnn,
+                               train_gnn_batched)
 
 __all__ = [
     "Graph", "arxiv_like", "flickr_like", "synthetic_graph",
     "GNNConfig", "gnn_forward", "init_gnn_params",
-    "train_gnn", "activation_memory_report",
+    "SubgraphBatch", "bfs_partition", "random_partition",
+    "make_subgraph_batches", "stack_batches",
+    "train_gnn", "train_gnn_batched", "activation_memory_report",
 ]

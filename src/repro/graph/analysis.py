@@ -8,10 +8,43 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import pack as packmod
 from repro.core import quant as quantmod
 from repro.core import random_projection as rpmod
 from repro.core.variance import js_divergence, model_histogram, optimize_levels
-from repro.graph.models import GNNConfig, spmm
+from repro.graph.models import GNNConfig, _dims, spmm
+
+
+def saved_bytes_per_layer(cfg: GNNConfig, in_dim: int,
+                          n_nodes: int) -> list[dict]:
+    """Per-layer saved-for-backward bytes under the paper's Table-1 model.
+
+    One row per GNN layer: ``fp32_bytes`` is the f32 linear input plus (on
+    hidden layers) the f32 ReLU context; ``compressed_bytes`` (only when
+    ``cfg.compression`` is set) is the packed post-RP code words + 8-byte
+    per-block (zero, range) pairs + the 1-bit ReLU sign mask.  ``n_nodes``
+    is whatever node count is live at once — the full graph, or one padded
+    subgraph batch in the mini-batch regime (this is what makes the same
+    model serve :func:`repro.graph.train.activation_memory_report` in both
+    modes).
+    """
+    dims = _dims(cfg, in_dim)
+    comp = cfg.compression
+    rows = []
+    for li, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        lin_in = d_in * (2 if cfg.arch == "sage" else 1)
+        hidden = li < len(dims) - 2
+        fp32 = n_nodes * lin_in * 4 + (n_nodes * d_out * 4 if hidden else 0)
+        row = {"layer": li, "fp32_bytes": fp32}
+        if comp is not None:
+            d_eff = lin_in // comp.rp_ratio if comp.rp_ratio > 1 else lin_in
+            c = packmod.packed_nbytes((n_nodes, d_eff), comp.bits,
+                                      comp.group_size)
+            if hidden:
+                c += n_nodes * d_out // 8           # 1-bit ReLU mask
+            row["compressed_bytes"] = c
+        rows.append(row)
+    return rows
 
 
 def collect_projected_activations(params, graph, cfg: GNNConfig,

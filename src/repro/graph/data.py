@@ -36,6 +36,23 @@ class Graph:
     def n_feats(self) -> int:
         return int(self.features.shape[1])
 
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_src.shape[0])
+
+
+def in_adjacency(edge_src, edge_dst, n_nodes: int):
+    """CSR over *destination*: ``(nbr, starts)`` with the in-neighbors
+    (message sources) of node ``u`` at ``nbr[starts[u]:starts[u+1]]``.
+
+    numpy-side helper for partitioners/samplers — the edge list itself stays
+    the device-side representation (``spmm`` consumes it directly)."""
+    src = np.asarray(edge_src)
+    dst = np.asarray(edge_dst)
+    order = np.argsort(dst, kind="stable")
+    starts = np.searchsorted(dst[order], np.arange(n_nodes + 1))
+    return src[order], starts
+
 
 def synthetic_graph(name: str, n_nodes: int, n_edges: int, n_feats: int,
                     n_classes: int, homophily: float = 0.65,

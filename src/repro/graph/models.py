@@ -35,13 +35,16 @@ def relu_1bit(z):
 
 
 def _relu_fwd(z):
-    mask = packmod.pack((z > 0).astype(jnp.int32).reshape(z.shape[0], -1), 1)
+    # Pack the sign bits of the *flattened* tensor as one row: rank-agnostic
+    # (scalars, vectors, (N, F) maps, stacked/batched rank>=3 inputs) and at
+    # most 31 wasted bits total, vs one word per row of a 2-D reshape.
+    mask = packmod.pack((z > 0).astype(jnp.int32).reshape(1, -1), 1)
     return jnp.maximum(z, 0.0), (mask, z.shape)
 
 
 def _relu_bwd(res, g):
     mask, shape = res
-    m = packmod.unpack(mask, 1, int(np.prod(shape[1:])))
+    m = packmod.unpack(mask, 1, int(np.prod(shape, dtype=np.int64)))
     return (g * m.reshape(shape).astype(g.dtype),)
 
 
@@ -97,11 +100,20 @@ def _maybe_compressed_matmul(x, w, cfg: GNNConfig, seed):
     return compressed_matmul(x, w, seed, cfg.compression)
 
 
-def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None):
-    """graph = (features, src, dst, gcn_w, mean_w)."""
+def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None,
+                node_mask=None):
+    """graph = (features, src, dst, gcn_w, mean_w).
+
+    ``node_mask`` ((N,) f32, optional) marks valid rows of a padded subgraph
+    batch: activations of masked-out rows are pinned to zero after every
+    layer, so the compressed stashes (``compressed_matmul`` inputs, ReLU
+    sign masks) see clean zeros on padding instead of bias leakage, and
+    quantization block statistics stay unpolluted.  ``None`` (full graph)
+    is the existing behavior, bit for bit.
+    """
     feats, src, dst, gcn_w, mean_w = graph
     n = feats.shape[0]  # static under jit
-    h = feats
+    h = feats if node_mask is None else feats * node_mask[:, None]
     seed = jnp.asarray(seed, jnp.uint32)
     for li, p in enumerate(params):
         layer_seed = seed + jnp.uint32(li * 1013)
@@ -118,7 +130,7 @@ def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None):
                 dropout_key, sub = jax.random.split(dropout_key)
                 keep = jax.random.bernoulli(sub, 1 - cfg.dropout, z.shape)
                 z = jnp.where(keep, z / (1 - cfg.dropout), 0.0)
-        h = z
+        h = z if node_mask is None else z * node_mask[:, None]
     return h
 
 

@@ -1,21 +1,35 @@
-"""Full-graph training loop for the paper's experiments (Table 1)."""
+"""GNN training engines: the paper's full-graph loop (Table 1) and the
+partition-sampled mini-batch engine (Cluster-GCN flavor) that opens the
+large-graph regime the memory wins actually target.
+
+``train_gnn`` is the original whole-graph ``value_and_grad`` step;
+``train_gnn_batched`` scans over padded subgraph batches (built by
+:mod:`repro.graph.sampling`) with per-batch activation seeds, optional
+gradient accumulation, donated params/opt state, and data-parallel batch
+sharding over a device mesh — the same shape as
+:func:`repro.launch.steps.make_train_step`.  ``n_parts=1`` is the
+full-graph special case and reproduces ``train_gnn`` results.
+"""
 from __future__ import annotations
 
 import time
 from functools import partial
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import pack as packmod
 from repro.core.compressor import CompressionConfig
+from repro.graph.analysis import saved_bytes_per_layer
 from repro.graph.data import Graph
-from repro.graph.models import GNNConfig, _dims, gnn_forward, graph_tuple, init_gnn_params
+from repro.graph.models import GNNConfig, gnn_forward, graph_tuple, init_gnn_params
+from repro.graph.sampling import _bucket, make_subgraph_batches, stack_batches
 from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.parallel.sharding import dp_size, graph_batch_pspecs, to_named
 
 
-def _loss_fn(params, graph, labels, mask, cfg, seed):
-    logits = gnn_forward(params, graph, cfg, seed=seed)
+def _loss_fn(params, graph, labels, mask, cfg, seed, node_mask=None):
+    logits = gnn_forward(params, graph, cfg, seed=seed, node_mask=node_mask)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
     return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1)
@@ -25,6 +39,15 @@ def _accuracy(params, graph, labels, mask, cfg):
     logits = gnn_forward(params, graph, cfg, seed=0)
     correct = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
     return jnp.sum(correct * mask) / jnp.maximum(mask.sum(), 1)
+
+
+def _result(eval_fn, params, g, gt, history, n_epochs, dt, **extra):
+    """Final full-graph val/test metrics + the shared engine result dict
+    (both training engines report through this one contract)."""
+    val = float(eval_fn(params, gt, g.labels, g.val_mask.astype(jnp.float32)))
+    test = float(eval_fn(params, gt, g.labels, g.test_mask.astype(jnp.float32)))
+    return {"test_acc": test, "val_acc": val, "history": history,
+            "epochs_per_sec": n_epochs / dt, "params": params, **extra}
 
 
 def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
@@ -65,41 +88,188 @@ def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
             history.append((epoch, float(loss), float(va)))
     jax.block_until_ready(params)
     dt = time.perf_counter() - t0
-
-    val = float(eval_fn(params, gt, g.labels, g.val_mask.astype(jnp.float32)))
-    test = float(eval_fn(params, gt, g.labels, g.test_mask.astype(jnp.float32)))
-    return {
-        "test_acc": test, "val_acc": val, "history": history,
-        "epochs_per_sec": n_epochs / dt, "params": params,
-    }
+    return _result(eval_fn, params, g, gt, history, n_epochs, dt)
 
 
-def activation_memory_report(g: Graph, cfg: GNNConfig) -> dict:
-    """Bytes of *saved-for-backward* activations per configuration — the
-    paper's Table 1 "M" column model.
+def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
+                      opt: AdamWConfig | None = None, n_epochs: int = 100,
+                      seed: int = 0, *, method: str = "bfs", halo: int = 0,
+                      grad_accum: int = 1, mesh=None, impl: str | None = None,
+                      node_multiple: int = 64, edge_multiple: int = 256,
+                      renormalize: bool = False, shuffle: bool = True,
+                      batches=None, eval_every: int = 10,
+                      verbose: bool = False):
+    """Partition-sampled mini-batch GNN training (Cluster-GCN flavor).
 
-    FP32 baseline stores the f32 input of every linear + f32 ReLU context;
-    compressed runs store packed codes + one (zero, range) f32 pair per
-    quantization block + 1-bit ReLU masks.
+    Splits ``g`` into ``n_parts`` padded subgraph batches (see
+    :func:`repro.graph.sampling.make_subgraph_batches` for ``method``,
+    ``halo``, bucket multiples, ``renormalize``), then runs one jitted
+    epoch step that ``lax.scan``s over per-batch optimizer updates with
+    donated params/opt state.  Peak live activation stash is one batch, not
+    the whole graph — the regime where the paper's block-wise compression
+    matters.
+
+    grad_accum   accumulate gradients over this many consecutive batches
+                 per optimizer update (make_train_step's scheme).
+    mesh         optional jax device mesh: each update consumes
+                 ``dp_size(mesh)`` batches in parallel, sharded over the
+                 data axes via :func:`repro.parallel.sharding.graph_batch_pspecs`
+                 (grads are averaged across the group).  ``n_parts`` must be
+                 a multiple of ``dp_size(mesh) * grad_accum``.
+    impl         kernel backend override for the compression stack, as in
+                 :func:`train_gnn`.
+    batches      prebuilt ``SubgraphBatch`` list (skips partitioning —
+                 lets benchmarks/tests reuse one sampling pass).
+
+    Per-batch activation seeds extend the full-graph scheme: batch ordinal
+    ``b = epoch * n_parts + position`` gets ``sr_seed = (b + 1) * 7919``,
+    so ``n_parts=1`` reproduces ``train_gnn`` seeds exactly.
+
+    Evaluation runs full-graph on the final params (the padded batches are
+    a *training*-time construct).  Returns the ``train_gnn`` result dict
+    plus ``n_parts``, ``updates_per_epoch``, ``batch_nodes``,
+    ``batch_edges``.
     """
-    dims = _dims(cfg, g.n_feats)
-    n = g.n_nodes
-    total_fp32 = 0
-    total_c = 0
+    if impl is not None:
+        cfg = cfg.with_impl(impl)
+    opt = opt or AdamWConfig(lr=5e-3, weight_decay=0.0)
+    if batches is None:
+        batches = make_subgraph_batches(
+            g, n_parts, method=method, halo=halo, seed=seed,
+            node_multiple=node_multiple, edge_multiple=edge_multiple,
+            renormalize=renormalize)
+    elif len(batches) != n_parts:
+        raise ValueError(f"prebuilt batches list has {len(batches)} entries "
+                         f"but n_parts={n_parts}")
+    n_batches = len(batches)
+    dp = dp_size(mesh) if mesh is not None else 1
+    group = dp * grad_accum
+    if n_batches % group:
+        raise ValueError(
+            f"n_parts={n_batches} must be a multiple of dp*grad_accum="
+            f"{dp}*{grad_accum}={group} (whole update groups per epoch)")
+    n_updates = n_batches // group
+
+    key = jax.random.PRNGKey(seed)
+    params = init_gnn_params(key, cfg, g.n_feats)
+    state = adamw_init(params, opt)
+    stacked = stack_batches(batches)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def epoch_step(params, state, epoch, grouped):
+        # grouped leaves: (n_updates, grad_accum, dp, ...)
+        def update(carry, inp):
+            params, state = carry
+            u, grp = inp
+            base = epoch * n_batches + u * group
+
+            def micro(gsum, inp2):
+                a, mb = inp2
+                ords = base + a * dp + jnp.arange(dp)
+                seeds = (ords + 1).astype(jnp.uint32) * jnp.uint32(7919)
+
+                def group_loss(p):
+                    losses = jax.vmap(
+                        lambda b, s: _loss_fn(p, b.graph_tuple(), b.labels,
+                                              b.train_mask, cfg, s,
+                                              node_mask=b.node_mask)
+                    )(mb, seeds)
+                    return losses.mean()
+
+                loss, grads = jax.value_and_grad(group_loss)(params)
+                return jax.tree.map(jnp.add, gsum, grads), loss
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            gsum, losses = jax.lax.scan(
+                micro, zeros, (jnp.arange(grad_accum), grp))
+            grads = jax.tree.map(lambda x: x / grad_accum, gsum)
+            params, state = adamw_update(grads, state, params, opt)
+            return (params, state), losses.mean()
+
+        (params, state), losses = jax.lax.scan(
+            update, (params, state), (jnp.arange(n_updates), grouped))
+        return params, state, losses.mean()
+
+    eval_fn = jax.jit(partial(_accuracy, cfg=cfg))
+    gt = graph_tuple(g)
+    order_rng = np.random.default_rng(seed ^ 0x5EEDBA5E)
+
+    def make_grouped(order):
+        grouped = jax.tree.map(
+            lambda x: x[order].reshape(n_updates, grad_accum, dp,
+                                       *x.shape[1:]), stacked)
+        if mesh is not None:
+            specs = graph_batch_pspecs(grouped, mesh, axis=2)
+            grouped = jax.device_put(grouped, to_named(specs, mesh))
+        return grouped
+
+    reshuffle = shuffle and n_batches > 1
+    grouped = None if reshuffle else make_grouped(np.arange(n_batches))
+    history = []
+    t0 = time.perf_counter()
+    for epoch in range(n_epochs):
+        if reshuffle:
+            grouped = make_grouped(order_rng.permutation(n_batches))
+        params, state, loss = epoch_step(params, state, jnp.asarray(epoch),
+                                         grouped)
+        if verbose and (epoch % eval_every == 0 or epoch == n_epochs - 1):
+            va = eval_fn(params, gt, g.labels, g.val_mask.astype(jnp.float32))
+            history.append((epoch, float(loss), float(va)))
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - t0
+    return _result(eval_fn, params, g, gt, history, n_epochs, dt,
+                   n_parts=n_batches, updates_per_epoch=n_updates,
+                   batch_nodes=batches[0].n_nodes,
+                   batch_edges=batches[0].n_edges)
+
+
+def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
+                             batch_nodes: int | None = None,
+                             node_multiple: int = 64) -> dict:
+    """Bytes of *saved-for-backward* activations — the paper's Table-1 "M"
+    column model, per layer and (optionally) per subgraph batch.
+
+    Full-graph keys (always present):
+
+    * ``fp32_bytes`` — f32 input of every linear + f32 ReLU context;
+    * ``compressed_bytes`` / ``reduction`` (when ``cfg.compression`` is
+      set) — packed codes + one (zero, range) f32 pair per quantization
+      block + 1-bit ReLU masks;
+    * ``per_layer`` — the same accounting, one dict per GNN layer
+      (``layer``, ``fp32_bytes``[, ``compressed_bytes``]).
+
+    With ``n_parts > 1`` the mini-batch regime is modeled too: batches run
+    sequentially, so the *peak* stash is a single padded batch.
+    ``batch_nodes`` defaults to ceil(N / n_parts) rounded up to
+    ``node_multiple`` (matching ``make_subgraph_batches`` padding); pass
+    the actual padded count (``train_gnn_batched``'s ``batch_nodes``) when
+    using halo or custom buckets.  The ``batched`` sub-dict then reports
+    ``peak_fp32_bytes``, ``peak_saved_bytes`` (compressed when configured),
+    a per-batch-size ``per_layer`` breakdown, and
+    ``peak_reduction_vs_full`` = full-graph saved bytes / per-batch peak.
+    """
+    per_layer = saved_bytes_per_layer(cfg, g.n_feats, g.n_nodes)
     comp = cfg.compression
-    for li, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
-        lin_in = d_in * (2 if cfg.arch == "sage" else 1)
-        total_fp32 += n * lin_in * 4                       # linear input
-        if li < len(dims) - 2:
-            total_fp32 += n * d_out * 4                    # relu ctx
-        if comp is not None:
-            d_eff = lin_in // comp.rp_ratio if comp.rp_ratio > 1 else lin_in
-            total_c += packmod.packed_nbytes((n, d_eff), comp.bits,
-                                             comp.group_size)
-            if li < len(dims) - 2:
-                total_c += n * d_out // 8                  # 1-bit mask
-    out = {"fp32_bytes": total_fp32}
+    total_fp32 = sum(r["fp32_bytes"] for r in per_layer)
+    out = {"fp32_bytes": total_fp32, "per_layer": per_layer}
+    full_saved = total_fp32
     if comp is not None:
+        total_c = sum(r["compressed_bytes"] for r in per_layer)
         out["compressed_bytes"] = total_c
         out["reduction"] = 1.0 - total_c / total_fp32
+        full_saved = total_c
+    if n_parts > 1:
+        if batch_nodes is None:
+            batch_nodes = _bucket(-(-g.n_nodes // n_parts), node_multiple)
+        rows_b = saved_bytes_per_layer(cfg, g.n_feats, batch_nodes)
+        peak_fp32 = sum(r["fp32_bytes"] for r in rows_b)
+        peak = (sum(r["compressed_bytes"] for r in rows_b)
+                if comp is not None else peak_fp32)
+        out["batched"] = {
+            "n_parts": n_parts, "batch_nodes": batch_nodes,
+            "peak_fp32_bytes": peak_fp32, "peak_saved_bytes": peak,
+            "full_graph_saved_bytes": full_saved,
+            "peak_reduction_vs_full": full_saved / peak,
+            "per_layer": rows_b,
+        }
     return out

@@ -22,6 +22,35 @@ def dp_axes(mesh):
     return ("pod", "data") if "pod" in mesh.shape else ("data",)
 
 
+def dp_size(mesh) -> int:
+    """Total data-parallel degree (product of the DP axis sizes)."""
+    total = 1
+    for a in dp_axes(mesh):
+        total *= _axis_size(mesh, a)
+    return total
+
+
+def graph_batch_pspecs(batch, mesh, axis: int = 0):
+    """PartitionSpecs for a stacked ``SubgraphBatch`` pytree: shard the
+    device-group axis ``axis`` over the DP mesh axes, replicate everything
+    else (node/edge tables are per-batch local, params stay replicated —
+    plain data parallelism over subgraph batches).
+
+    Leaves whose ``axis`` dim doesn't divide the DP degree (or that have no
+    such dim) stay replicated, mirroring the divisibility policy of
+    :func:`batch_pspecs`.
+    """
+    total = dp_size(mesh)
+
+    def rule(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim > axis and leaf.shape[axis] % total == 0:
+            spec[axis] = dp_axes(mesh)
+        return P(*spec)
+
+    return jax.tree.map(rule, batch)
+
+
 def _div(n: int, mesh, axis: str) -> bool:
     return n % _axis_size(mesh, axis) == 0
 

@@ -6,10 +6,13 @@ import numpy as np
 import pytest
 
 from repro.core import CompressionConfig
+from repro.core.compressor import compress
 from repro.graph import (GNNConfig, arxiv_like, synthetic_graph, train_gnn,
                          activation_memory_report)
 from repro.graph.analysis import collect_projected_activations, table2_row
-from repro.graph.models import gnn_forward, graph_tuple, init_gnn_params
+from repro.graph.models import (gnn_forward, graph_tuple, init_gnn_params,
+                                relu_1bit)
+from repro.graph.train import _loss_fn
 
 
 @pytest.fixture(scope="module")
@@ -65,6 +68,44 @@ def test_memory_report_trends(small_graph):
         if prev is not None:
             assert rep["compressed_bytes"] <= prev
         prev = rep["compressed_bytes"]
+
+
+def test_relu_1bit_shape_robustness():
+    """The packed sign mask must round-trip gradients for any rank — the
+    old packing reshaped to (shape[0], -1) and silently assumed 2-D."""
+    key = jax.random.PRNGKey(7)
+    for shape in [(), (5,), (33,), (5, 6), (3, 4, 5), (2, 3, 4, 5)]:
+        z = jax.random.normal(key, shape)
+        y, vjp = jax.vjp(relu_1bit, z)
+        (dz,) = vjp(jnp.ones_like(z))
+        assert jnp.array_equal(y, jnp.maximum(z, 0.0)), shape
+        assert jnp.array_equal(dz, (z > 0).astype(z.dtype)), shape
+
+
+def test_sr_seed_determinism_and_layer_decorrelation(small_graph):
+    """Identical sr_seed => bit-identical grads across runs; different
+    seeds (and the per-layer ``seed + li*1013`` offsets) actually change
+    the stochastic-rounding codes."""
+    g = small_graph
+    cfg = GNNConfig(arch="sage", hidden=(32,), n_classes=g.num_classes,
+                    compression=CompressionConfig(2, 64, 8))
+    params = init_gnn_params(jax.random.PRNGKey(0), cfg, g.n_feats)
+    gt = graph_tuple(g)
+    mask = g.train_mask.astype(jnp.float32)
+    grad_fn = jax.jit(jax.grad(_loss_fn), static_argnums=(4,))
+    g1 = grad_fn(params, gt, g.labels, mask, cfg, jnp.uint32(5))
+    g2 = grad_fn(params, gt, g.labels, mask, cfg, jnp.uint32(5))
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    g3 = grad_fn(params, gt, g.labels, mask, cfg, jnp.uint32(6))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g3)))
+    # the per-layer offset scheme: adjacent layer seeds give distinct codes
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    seed = jnp.uint32(5 * 7919)
+    c0 = compress(x, cfg.compression, seed)
+    c1 = compress(x, cfg.compression, seed + jnp.uint32(1013))
+    assert not np.array_equal(np.asarray(c0.packed), np.asarray(c1.packed))
 
 
 def test_table2_instrumentation(small_graph):

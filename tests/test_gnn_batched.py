@@ -1,0 +1,188 @@
+"""Mini-batch subgraph engine tests: partition coverage, padding inertness
+(zero gradient), n_parts=1 parity with the full-graph loop, batched memory
+model, and kernel-backend parity of the batched path."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig
+from repro.graph import (GNNConfig, activation_memory_report,
+                         bfs_partition, make_subgraph_batches,
+                         random_partition, synthetic_graph, train_gnn,
+                         train_gnn_batched)
+from repro.graph.models import init_gnn_params
+from repro.graph.train import _loss_fn
+from repro.launch.mesh import make_local_mesh
+
+
+@pytest.fixture(scope="module")
+def g():
+    return synthetic_graph("t", 700, 3500, 32, 5, homophily=0.5,
+                           feature_noise=1.5, seed=1)
+
+
+COMP = CompressionConfig(bits=2, group_size=64, rp_ratio=8)
+
+
+def _cfg(g, comp=COMP, hidden=(32,)):
+    return GNNConfig(arch="sage", hidden=hidden, n_classes=g.num_classes,
+                     compression=comp)
+
+
+# ------------------------------------------------------------- partitioner
+def test_partitions_cover_and_balance(g):
+    cap = math.ceil(g.n_nodes / 4)
+    for part in (random_partition(g.n_nodes, 4, seed=0),
+                 bfs_partition(g.edge_src, g.edge_dst, g.n_nodes, 4, seed=0)):
+        assert part.shape == (g.n_nodes,)
+        sizes = np.bincount(part, minlength=4)
+        assert sizes.sum() == g.n_nodes
+        assert sizes.max() <= cap and sizes.min() >= 1, sizes
+    # uneven n/P must never yield an empty part (9 = 3+3+3+0 regression)
+    for n, p in [(9, 4), (7, 3), (700, 6)]:
+        sizes = np.bincount(random_partition(n, p, seed=0), minlength=p)
+        assert sizes.min() >= n // p and sizes.max() <= -(-n // p), (n, p)
+
+
+def test_batches_static_shapes_and_masks(g):
+    batches = make_subgraph_batches(g, 3, method="bfs", seed=0)
+    shapes = {(b.features.shape, b.edge_src.shape) for b in batches}
+    assert len(shapes) == 1  # one static bucket -> scan traces once
+    assert batches[0].n_nodes % 64 == 0 and batches[0].n_edges % 256 == 0
+    # every real node appears exactly once (halo=0); masks partition cleanly
+    assert sum(int(b.node_mask.sum()) for b in batches) == g.n_nodes
+    assert (sum(int(b.train_mask.sum()) for b in batches)
+            == int(g.train_mask.sum()))
+    for b in batches:
+        nl, el = int(b.n_real_nodes), int(b.n_real_edges)
+        assert not np.any(np.asarray(b.features)[nl:])      # zero pad rows
+        assert not np.any(np.asarray(b.gcn_weight)[el:])    # inert pad edges
+        assert not np.any(np.asarray(b.mean_weight)[el:])
+        # masks never mark padding
+        assert not np.any(np.asarray(b.train_mask)[nl:])
+        assert not np.any(np.asarray(b.node_mask)[nl:])
+
+
+def test_halo_adds_context_nodes_without_loss_rows(g):
+    plain = make_subgraph_batches(g, 4, method="bfs", seed=0)
+    halo = make_subgraph_batches(g, 4, method="bfs", seed=0, halo=1)
+    assert (sum(int(b.node_mask.sum()) for b in halo)
+            > sum(int(b.node_mask.sum()) for b in plain))
+    # halo rows aggregate but never contribute loss/metrics
+    assert (sum(int(b.train_mask.sum()) for b in halo)
+            == int(g.train_mask.sum()))
+
+
+# ----------------------------------------------------- n_parts=1 parity
+def test_nparts1_bit_parity_with_full_graph(g):
+    """Tight padding (multiples of 1) makes the batched engine the identity
+    refactor: same seeds, same update order -> bit-identical params."""
+    cfg = _cfg(g)
+    r_full = train_gnn(g, cfg, n_epochs=12, seed=0)
+    r_b1 = train_gnn_batched(g, cfg, 1, n_epochs=12, seed=0,
+                             node_multiple=1, edge_multiple=1)
+    for a, b in zip(jax.tree.leaves(r_full["params"]),
+                    jax.tree.leaves(r_b1["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert r_full["test_acc"] == r_b1["test_acc"]
+
+
+def test_nparts1_padded_parity_within_tolerance(g):
+    """With real padding the quantization block boundaries shift, so parity
+    is statistical, not bit-level — accuracy must stay within tolerance."""
+    cfg = _cfg(g)
+    r_full = train_gnn(g, cfg, n_epochs=25, seed=0)
+    r_b1 = train_gnn_batched(g, cfg, 1, n_epochs=25, seed=0,
+                             node_multiple=64, edge_multiple=256)
+    assert abs(r_full["val_acc"] - r_b1["val_acc"]) < 0.05
+    assert abs(r_full["test_acc"] - r_b1["test_acc"]) < 0.05
+
+
+# ------------------------------------------------- padding: zero gradient
+def _batch_loss(params, b, cfg, seed):
+    return _loss_fn(params, b.graph_tuple(), b.labels, b.train_mask, cfg,
+                    jnp.uint32(seed), node_mask=b.node_mask)
+
+
+def test_padding_contributes_zero_gradient(g):
+    batches = make_subgraph_batches(g, 2, method="bfs", seed=0)
+    b = batches[0]
+    nl = int(b.n_real_nodes)
+    assert nl < b.n_nodes  # the bucket actually padded
+
+    # (a) uncompressed: loss AND param grads exactly invariant to garbage
+    # planted in the padding rows (node_mask pins them to zero).
+    cfg = _cfg(g, comp=None)
+    params = init_gnn_params(jax.random.PRNGKey(0), cfg, g.n_feats)
+    garbage = b.features.at[nl:].set(1e3)
+    b_dirty = dataclasses.replace(b, features=garbage)
+    l0, g0 = jax.value_and_grad(_batch_loss)(params, b, cfg, 3)
+    l1, g1 = jax.value_and_grad(_batch_loss)(params, b_dirty, cfg, 3)
+    assert float(l0) == float(l1)
+    for a, c in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    # (b) compressed path: d(loss)/d(features) is exactly zero on pad rows.
+    cfg_c = _cfg(g)
+    params = init_gnn_params(jax.random.PRNGKey(0), cfg_c, g.n_feats)
+    df = jax.grad(lambda f: _batch_loss(
+        params, dataclasses.replace(b, features=f), cfg_c, 3))(b.features)
+    assert not np.any(np.asarray(df)[nl:])
+
+
+# --------------------------------------------------------- batched engine
+def test_batched_training_learns(g):
+    cfg = _cfg(g)
+    r = train_gnn_batched(g, cfg, 4, n_epochs=25, seed=0)
+    assert r["test_acc"] > 2.0 / g.num_classes, r["test_acc"]
+    assert r["updates_per_epoch"] == 4
+
+
+def test_batched_grad_accum_and_mesh(g):
+    cfg = _cfg(g, comp=None)
+    r = train_gnn_batched(g, cfg, 4, n_epochs=8, seed=0, grad_accum=2,
+                          mesh=make_local_mesh())
+    assert r["updates_per_epoch"] == 2
+    assert np.isfinite(r["test_acc"])
+    with pytest.raises(ValueError):
+        train_gnn_batched(g, cfg, 3, n_epochs=1, grad_accum=2)
+
+
+def test_batched_impl_parity(g):
+    """Same codes on every kernel backend (PR 1 gate) => the batched engine
+    trains identically under jnp and pallas-interp."""
+    small = synthetic_graph("p", 256, 1200, 16, 4, seed=2)
+    cfg = GNNConfig(arch="sage", hidden=(16,), n_classes=small.num_classes,
+                    compression=COMP)
+    rs = {impl: train_gnn_batched(small, cfg, 2, n_epochs=3, seed=0,
+                                  impl=impl)
+          for impl in ("jnp", "interp")}
+    assert rs["jnp"]["test_acc"] == rs["interp"]["test_acc"]
+    for a, b in zip(jax.tree.leaves(rs["jnp"]["params"]),
+                    jax.tree.leaves(rs["interp"]["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------- memory model
+def test_batched_memory_report(g):
+    cfg = _cfg(g, hidden=(64, 64))
+    rep = activation_memory_report(g, cfg, n_parts=4)
+    # full-graph keys unchanged + per-layer rows sum to the totals
+    assert rep["reduction"] > 0.9
+    assert sum(r["fp32_bytes"] for r in rep["per_layer"]) == rep["fp32_bytes"]
+    assert (sum(r["compressed_bytes"] for r in rep["per_layer"])
+            == rep["compressed_bytes"])
+    b = rep["batched"]
+    # acceptance: peak saved bytes at n_parts>=4 is >=2x below full-graph
+    assert b["peak_saved_bytes"] * 2 <= rep["compressed_bytes"]
+    assert b["peak_reduction_vs_full"] >= 2.0
+    # actual padded batches agree with the analytic default
+    batches = make_subgraph_batches(g, 4, method="random", seed=0)
+    rep2 = activation_memory_report(g, cfg, n_parts=4,
+                                    batch_nodes=batches[0].n_nodes)
+    assert rep2["batched"]["batch_nodes"] == batches[0].n_nodes
