@@ -1,0 +1,122 @@
+"""Adaptive bit-allocation benchmark: fixed INT2 vs variance-guided
+mixed precision at equal (or lower) compressed bytes.
+
+Two allocated arms against the fixed-INT2 baseline on the arxiv-like graph:
+
+* ``autoprec`` — budget = 2.0 average stash bits (the fixed-INT2
+  footprint).  The allocator splits the same byte ceiling with the
+  improved variance model: equal-or-lower bytes, strictly lower total
+  expected SR variance (Eq. 10 summed over layers), accuracy within noise.
+* ``autoprec_low`` — budget = 1.5 average bits, below any uniform width
+  except INT1: the solver returns a genuinely mixed per-layer allocation
+  and is compared against the INT1 uniform fallback at the same budget.
+
+Results land in ``BENCH_autoprec.json`` next to the repo root (same
+convention as ``BENCH_compressor.json`` / ``BENCH_gnn_batched.json``).
+Expected SR variance is computed with the paper's range-moment model on a
+shared sensitivity basis (the fixed run's final params) so the column is
+deterministic and comparable across arms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from repro.core import CompressionConfig, autoprec
+from repro.graph import (GNNConfig, activation_memory_report, arxiv_like,
+                         collect_layer_stats, train_gnn)
+from repro.graph.models import graph_tuple
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_autoprec.json"
+
+
+def _arm(stats, cfg: GNNConfig, r, g, budget_avg_bits=None) -> dict:
+    per = cfg.layer_compression()
+    rep = activation_memory_report(g, cfg)
+    arm = {
+        "test_acc": r["test_acc"],
+        "epochs_per_sec": r["epochs_per_sec"],
+        "bits_per_layer": [c.bits if c is not None else None for c in per],
+        "vm": [bool(c.vm) if c is not None else None for c in per],
+        "stash_bytes": autoprec.total_stash_bytes(stats, per),
+        "expected_sr_variance": autoprec.total_expected_variance(stats, per),
+        "saved_bytes_with_masks": rep["compressed_bytes"],
+    }
+    if budget_avg_bits is not None:
+        arm["budget_avg_bits"] = budget_avg_bits
+        arm["bit_budget_bytes"] = r["bit_budget_bytes"]
+    return arm
+
+
+def run(scale: float = 0.01, epochs: int = 30, hidden=(64, 64),
+        group_size: int = 256, seed: int = 0):
+    g = arxiv_like(scale=scale)
+    fixed_comp = CompressionConfig(bits=2, group_size=group_size, rp_ratio=8)
+    cfg_fixed = GNNConfig(arch="sage", hidden=hidden,
+                          n_classes=g.num_classes, compression=fixed_comp)
+    # allocated arms start from the VM template — the allocator's whole
+    # point is spending the improved variance model, tables included
+    cfg_vm = GNNConfig(arch="sage", hidden=hidden, n_classes=g.num_classes,
+                       compression=dataclasses.replace(fixed_comp, vm=True))
+
+    r_fixed = train_gnn(g, cfg_fixed, n_epochs=epochs, seed=seed)
+    r_eq = train_gnn(g, cfg_vm, n_epochs=epochs, seed=seed, bit_budget=2.0,
+                     autoprec_refresh=max(epochs // 2, 1))
+    r_low = train_gnn(g, cfg_vm, n_epochs=epochs, seed=seed, bit_budget=1.5,
+                      autoprec_refresh=max(epochs // 2, 1))
+
+    # shared sensitivity basis: range moments at the fixed run's final params
+    stats = collect_layer_stats(r_fixed["params"], graph_tuple(g), cfg_fixed)
+
+    data = {"graph": {"name": g.name, "n_nodes": g.n_nodes,
+                      "n_edges": g.n_edges, "hidden": list(hidden),
+                      "group_size": group_size, "epochs": epochs},
+            "fixed_int2": _arm(stats, cfg_fixed, r_fixed, g),
+            "autoprec": _arm(stats, r_eq["cfg"], r_eq, g,
+                             budget_avg_bits=2.0),
+            "autoprec_low": _arm(stats, r_low["cfg"], r_low, g,
+                                 budget_avg_bits=1.5)}
+
+    # the INT1 uniform fallback is the only fixed width inside the low budget
+    cfg_int1 = cfg_fixed.with_layer_bits([1] * cfg_fixed.n_layers)
+    per1 = cfg_int1.layer_compression()
+    data["autoprec_low"]["uniform_int1_fallback"] = {
+        "stash_bytes": autoprec.total_stash_bytes(stats, per1),
+        "expected_sr_variance": autoprec.total_expected_variance(stats, per1),
+    }
+
+    fx, eq = data["fixed_int2"], data["autoprec"]
+    data["acceptance"] = {
+        "equal_or_lower_bytes": eq["stash_bytes"] <= fx["stash_bytes"],
+        "lower_expected_sr_variance":
+            eq["expected_sr_variance"] < fx["expected_sr_variance"],
+        "acc_delta_vs_fixed": eq["test_acc"] - fx["test_acc"],
+    }
+    JSON_PATH.write_text(json.dumps(data, indent=2))
+    return data
+
+
+def main(fast: bool = True):
+    data = run(scale=0.01 if fast else 0.02, epochs=20 if fast else 60)
+    out = []
+    for arm in ("fixed_int2", "autoprec", "autoprec_low"):
+        d = data[arm]
+        us = 1e6 / max(d["epochs_per_sec"], 1e-9)
+        out.append((
+            f"autoprec/{arm}", us,
+            f"acc={d['test_acc']:.4f};bytes={d['stash_bytes']};"
+            f"evar={d['expected_sr_variance']:.3e};"
+            f"bits={'-'.join(str(b) for b in d['bits_per_layer'])}"))
+    ok = data["acceptance"]
+    out.append((
+        "autoprec/acceptance", 0.0,
+        f"bytes_ok={ok['equal_or_lower_bytes']};"
+        f"var_ok={ok['lower_expected_sr_variance']};"
+        f"acc_delta={ok['acc_delta_vs_fixed']:+.4f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

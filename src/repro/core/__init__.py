@@ -4,7 +4,8 @@ Execution strategy (reference jnp vs fused Pallas kernels) is owned by
 :mod:`repro.core.backend`; flip it per-config via ``CompressionConfig.impl``
 or globally at trace time via :func:`use_impl`.
 """
-from repro.core import backend
+from repro.core import autoprec, backend
+from repro.core.autoprec import LayerStats, allocate_bits
 from repro.core.backend import resolve_impl, use_impl
 from repro.core.compressor import (
     CompressionConfig,
@@ -28,6 +29,7 @@ from repro.core.variance import (
 )
 
 __all__ = [
+    "LayerStats", "allocate_bits", "autoprec",
     "CompressionConfig", "CompressedTensor", "backend", "compress",
     "decompress", "compressed_block", "compressed_elementwise",
     "compressed_linear", "compressed_matmul", "clipped_normal_params",

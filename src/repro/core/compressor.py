@@ -35,7 +35,10 @@ class CompressionConfig:
     rp_ratio    D/R random-projection ratio (paper uses 8); 0 disables RP.
     vm          use variance-minimized non-uniform levels (paper §3.2).
     vm_dim      D parameter of CN_[1/D] for level optimization; defaults to
-                the quantization block size (paper App. C uses the row dim).
+                the *post-RP* quantization block size, i.e.
+                ``group_size // rp_ratio`` when RP is on (paper App. C uses
+                the projected row dim).  ``None`` means "use the default";
+                explicit values < 2 are rejected.
     impl        kernel backend: "auto" | "jnp" | "interp" | "pallas"
                 (see :mod:`repro.core.backend`).  One flag flips an entire
                 training job between reference and fused kernels.
@@ -48,11 +51,29 @@ class CompressionConfig:
     vm_dim: int | None = None
     impl: str = "auto"
 
+    def cn_dim(self) -> int:
+        """The D parameter of the CN_[1/D] activation model.
+
+        An explicit ``vm_dim`` always wins (``None`` is the only sentinel —
+        0 is rejected, not silently replaced).  The default follows paper
+        App. C: the dimension the clip model sees is the *post-RP* one, so
+        with ``rp_ratio > 1`` the block size is divided down by the
+        projection ratio.  Clamped to 2 (CN needs Φ⁻¹(1/D) finite).
+        """
+        if self.vm_dim is not None:
+            if self.vm_dim < 2:
+                raise ValueError(
+                    f"vm_dim must be >= 2 (CN_[1/D] needs 1/D < 1/2), got "
+                    f"{self.vm_dim}")
+            return int(self.vm_dim)
+        d = (self.group_size // self.rp_ratio if self.rp_ratio > 1
+             else self.group_size)
+        return max(int(d), 2)
+
     def levels(self) -> tuple[float, ...] | None:
         if not self.vm:
             return None
-        d = self.vm_dim or self.group_size
-        return optimize_levels(int(d), self.bits)
+        return optimize_levels(self.cn_dim(), self.bits)
 
     def with_impl(self, impl: str) -> "CompressionConfig":
         """Same compression scheme on a different kernel backend."""

@@ -31,13 +31,18 @@ def hash_u32(x: jnp.ndarray) -> jnp.ndarray:
 
 
 def uniform_from_counter(seed, counter: jnp.ndarray) -> jnp.ndarray:
-    """U[0,1) floats from (scalar seed, uint32 counter array).
+    """U[0,1) floats from (seed, uint32 counter array).
 
-    24 mantissa bits — exactly representable in float32.
+    24 mantissa bits — exactly representable in float32.  ``seed`` is
+    normally a scalar (the kernel path); an array seed broadcastable
+    against ``counter`` selects a distinct stream per element (the
+    wraparound-safe 64-bit counter path in :mod:`repro.core.quant`) and
+    is bit-identical to the scalar path wherever the values coincide.
     """
     seed = jnp.asarray(seed, jnp.uint32)
+    hs = hash_u32(seed.reshape(1) if seed.ndim == 0 else seed)
     mixed = hash_u32((counter.astype(jnp.uint32) * _GOLDEN).astype(jnp.uint32)
-                     + hash_u32(seed.reshape(1)))
+                     + hs)
     return (mixed >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.prng import uniform_from_counter
+from repro.core.prng import hash_u32, uniform_from_counter
 
 #: Shared clamp constant for zero-width ranges / bins.  Both the jnp path
 #: (:func:`quantize_grouped`) and the fused Pallas kernels
@@ -79,6 +79,20 @@ def stochastic_round_to_levels(
 
     Returns int32 codes (indices into ``levels``).  Unbiased for any strictly
     increasing level table with levels[0]=0, levels[-1]=B (paper App. A).
+
+    ``counter_base`` offsets the per-element counter stream so callers can
+    chunk one logical tensor across calls.  It is a python int and may
+    exceed 2³²: the effective per-element counter is the 64-bit
+    ``counter_base + index``, carried as (low word, high word) — the low
+    word is the uint32 counter as before and the high word (including the
+    per-element carry where a chunk straddles a 2³² boundary) is folded
+    into the seed through the counter PRNG hash.  Streams therefore never
+    alias across any 2³² wrap.  Whenever the high word is 0 the fold is
+    the identity (``hash_u32(0) == 0``), which keeps the common path —
+    and the kernels, which always run with base 0 — bit-identical.
+    A *single call* must stay under 2³² elements (its index array is
+    uint32); callers with larger logical tensors chunk and advance
+    ``counter_base``, which is exactly the case the 64-bit carry covers.
     """
     nlev = levels.shape[0]
     # bin index i in 1..B such that levels[i-1] <= h <= levels[i]
@@ -88,10 +102,12 @@ def stochastic_round_to_levels(
     lo = jnp.take(levels, upper_idx - 1)
     hi = jnp.take(levels, upper_idx)
     p_up = (hnorm - lo) / jnp.maximum(hi - lo, _EPS)
-    counter = (
-        jnp.arange(hnorm.size, dtype=jnp.uint32).reshape(hnorm.shape)
-        + jnp.uint32(counter_base)
-    )
+    base_hi, base_lo = divmod(int(counter_base), 1 << 32)
+    idx = jnp.arange(hnorm.size, dtype=jnp.uint32).reshape(hnorm.shape)
+    counter = idx + jnp.uint32(base_lo)
+    carry = (counter < jnp.uint32(base_lo)).astype(jnp.uint32)
+    hi_word = jnp.uint32(base_hi & 0xFFFF_FFFF) + carry
+    seed = jnp.asarray(seed, jnp.uint32) ^ hash_u32(hi_word)
     u = uniform_from_counter(seed, counter)
     return jnp.where(u < p_up, upper_idx, upper_idx - 1).astype(jnp.int32)
 

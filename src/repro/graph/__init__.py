@@ -1,5 +1,6 @@
 """GNN substrate: the paper's own experimental domain (GCN / GraphSAGE),
 full-graph and partition-sampled mini-batch training."""
+from repro.graph.analysis import collect_layer_stats
 from repro.graph.data import Graph, arxiv_like, flickr_like, synthetic_graph
 from repro.graph.models import GNNConfig, gnn_forward, init_gnn_params
 from repro.graph.sampling import (SubgraphBatch, bfs_partition,
@@ -14,4 +15,5 @@ __all__ = [
     "SubgraphBatch", "bfs_partition", "random_partition",
     "make_subgraph_batches", "stack_batches",
     "train_gnn", "train_gnn_batched", "activation_memory_report",
+    "collect_layer_stats",
 ]

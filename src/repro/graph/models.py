@@ -61,11 +61,51 @@ def spmm(h, src, dst, w, n_nodes: int):
 # ----------------------------------------------------------------- model
 @dataclasses.dataclass(frozen=True)
 class GNNConfig:
+    """``compression`` is heterogeneous-precision aware: a single
+    ``CompressionConfig`` is broadcast to every layer (the original
+    homogeneous behavior), while a tuple carries one entry per GNN layer
+    (``len(hidden) + 1``; ``None`` entries leave that layer uncompressed).
+    :meth:`layer_compression` is the normalized per-layer view every
+    consumer (forward pass, memory model, allocator) reads."""
+
     arch: str = "sage"                 # "gcn" | "sage"
     hidden: tuple[int, ...] = (256, 256)
     n_classes: int = 40
-    compression: CompressionConfig | None = None
+    compression: (CompressionConfig | None
+                  | tuple[CompressionConfig | None, ...]) = None
     dropout: float = 0.0
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.hidden) + 1
+
+    def layer_compression(self) -> tuple[CompressionConfig | None, ...]:
+        """Per-layer compression configs, broadcasting a shared one."""
+        if self.compression is None:
+            return (None,) * self.n_layers
+        if isinstance(self.compression, CompressionConfig):
+            return (self.compression,) * self.n_layers
+        per = tuple(self.compression)
+        if len(per) != self.n_layers:
+            raise ValueError(
+                f"per-layer compression tuple has {len(per)} entries for a "
+                f"{self.n_layers}-layer model")
+        return per
+
+    def with_layer_bits(self, bits) -> "GNNConfig":
+        """Pin each layer's quantization width (autoprec's output).
+
+        ``bits`` holds one entry per layer; entries that are falsy (0/None)
+        or land on an uncompressed layer leave that layer untouched.
+        """
+        per = self.layer_compression()
+        if len(bits) != self.n_layers:
+            raise ValueError(
+                f"got {len(bits)} bit-widths for {self.n_layers} layers")
+        new = tuple(
+            c if c is None or not b else dataclasses.replace(c, bits=int(b))
+            for c, b in zip(per, bits))
+        return dataclasses.replace(self, compression=new)
 
     def with_impl(self, impl: str) -> "GNNConfig":
         """Same model, compression routed through a different kernel backend.
@@ -75,8 +115,12 @@ class GNNConfig:
         """
         if self.compression is None:
             return self
-        return dataclasses.replace(
-            self, compression=self.compression.with_impl(impl))
+        if isinstance(self.compression, CompressionConfig):
+            return dataclasses.replace(
+                self, compression=self.compression.with_impl(impl))
+        return dataclasses.replace(self, compression=tuple(
+            None if c is None else c.with_impl(impl)
+            for c in self.compression))
 
 
 def _dims(cfg: GNNConfig, in_dim: int):
@@ -94,10 +138,10 @@ def init_gnn_params(key, cfg: GNNConfig, in_dim: int):
     return params
 
 
-def _maybe_compressed_matmul(x, w, cfg: GNNConfig, seed):
-    if cfg.compression is None:
+def _maybe_compressed_matmul(x, w, comp: CompressionConfig | None, seed):
+    if comp is None:
         return x @ w
-    return compressed_matmul(x, w, seed, cfg.compression)
+    return compressed_matmul(x, w, seed, comp)
 
 
 def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None,
@@ -115,15 +159,17 @@ def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None,
     n = feats.shape[0]  # static under jit
     h = feats if node_mask is None else feats * node_mask[:, None]
     seed = jnp.asarray(seed, jnp.uint32)
+    per_layer = cfg.layer_compression()
     for li, p in enumerate(params):
         layer_seed = seed + jnp.uint32(li * 1013)
+        comp = per_layer[li]
         if cfg.arch == "gcn":
-            z = _maybe_compressed_matmul(h, p["w"], cfg, layer_seed) + p["b"]
+            z = _maybe_compressed_matmul(h, p["w"], comp, layer_seed) + p["b"]
             z = spmm(z, src, dst, gcn_w, n)
         else:  # sage
             agg = spmm(h, src, dst, mean_w, n)
             x = jnp.concatenate([h, agg], axis=1)
-            z = _maybe_compressed_matmul(x, p["w"], cfg, layer_seed) + p["b"]
+            z = _maybe_compressed_matmul(x, p["w"], comp, layer_seed) + p["b"]
         if li < len(params) - 1:
             z = relu_1bit(z)
             if cfg.dropout and dropout_key is not None:

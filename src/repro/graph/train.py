@@ -12,6 +12,7 @@ full-graph special case and reproduces ``train_gnn`` results.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from functools import partial
 
@@ -19,8 +20,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import autoprec
 from repro.core.compressor import CompressionConfig
-from repro.graph.analysis import saved_bytes_per_layer
+from repro.graph.analysis import collect_layer_stats, saved_bytes_per_layer
 from repro.graph.data import Graph
 from repro.graph.models import GNNConfig, gnn_forward, graph_tuple, init_gnn_params
 from repro.graph.sampling import _bucket, make_subgraph_batches, stack_batches
@@ -41,6 +43,84 @@ def _accuracy(params, graph, labels, mask, cfg):
     return jnp.sum(correct * mask) / jnp.maximum(mask.sum(), 1)
 
 
+class _Autoprec:
+    """Variance-guided bit-allocation lifecycle shared by both engines.
+
+    Owns the budget (frozen on the first allocation so refreshes re-split
+    the *same* byte ceiling), the current per-layer widths, and the refresh
+    cadence.  ``allocate`` runs the cheap stats pass on the calibration
+    graph it was given — the full graph for ``train_gnn``, a single padded
+    subgraph batch for ``train_gnn_batched`` (so the probe never
+    re-materializes the full-graph activations the batched engine exists
+    to avoid; per-layer moments and noise ratios are scale-invariant) —
+    and calibrates each layer's ``grad_sens`` with a two-seed gradient
+    probe: ``dx`` and the ReLU mask are SR-noise-free, so
+    ``dw_l(s₁) − dw_l(s₂)`` isolates exactly the dequantization noise
+    layer l's stash injects.
+    """
+
+    def __init__(self, gt, labels, tr_mask, cfg: GNNConfig,
+                 bit_budget: float, refresh: int, seed: int, node_mask=None):
+        self.templates = cfg.layer_compression()
+        if all(c is None for c in self.templates):
+            raise ValueError(
+                "bit_budget= needs a GNNConfig with compression configured")
+        self.base_cfg = cfg
+        self.bit_budget = float(bit_budget)
+        self.refresh = int(refresh)
+        self.gt = gt
+        self.labels = labels
+        self.tr_mask = tr_mask
+        self.node_mask = node_mask
+        self.seed = seed
+        self.budget_bytes = None
+        self.bits: tuple[int, ...] | None = None
+        self._grad_fn = jax.jit(jax.grad(_loss_fn), static_argnums=(4,))
+
+    def _probe_grad_sens(self, params, stats):
+        """Realized per-layer dw SR noise at template widths, divided by the
+        bit-scaling curve — so any candidate width re-prices as
+        ``grad_sens * normalized_sr_variance(candidate)``."""
+        s1, s2 = (jnp.uint32((self.seed * 2654435761 + 101) & 0xFFFF_FFFF),
+                  jnp.uint32((self.seed * 2654435761 + 211) & 0xFFFF_FFFF))
+        g1 = self._grad_fn(params, self.gt, self.labels, self.tr_mask,
+                           self.base_cfg, s1, self.node_mask)
+        g2 = self._grad_fn(params, self.gt, self.labels, self.tr_mask,
+                           self.base_cfg, s2, self.node_mask)
+        out = []
+        for st, tmpl, p1, p2 in zip(stats, self.templates, g1, g2):
+            if st is None or tmpl is None:
+                out.append(st)
+                continue
+            noise = float(0.5 * jnp.sum((p1["w"] - p2["w"]) ** 2))
+            sens = noise / max(autoprec.normalized_sr_variance(tmpl), 1e-30)
+            # a zero probe (e.g. untrained head with zero grads) keeps the
+            # range-moment fallback rather than marking the layer free
+            out.append(dataclasses.replace(st, grad_sens=sens or None))
+        return out
+
+    def allocate(self, params) -> tuple[GNNConfig, bool]:
+        """(re)solve the allocation; returns (cfg, changed)."""
+        stats = collect_layer_stats(params, self.gt, self.base_cfg,
+                                    seed=self.seed)
+        if self.budget_bytes is None:
+            self.budget_bytes = autoprec.budget_bytes_for(
+                stats, self.templates, self.bit_budget)
+        stats = self._probe_grad_sens(params, stats)
+        bits = autoprec.allocate_bits(stats, self.templates,
+                                      self.budget_bytes)
+        changed = bits != self.bits
+        self.bits = bits
+        return self.base_cfg.with_layer_bits(bits), changed
+
+    def due(self, epoch: int) -> bool:
+        return self.refresh > 0 and epoch > 0 and epoch % self.refresh == 0
+
+    def extras(self) -> dict:
+        return {"bits_per_layer": list(self.bits),
+                "bit_budget_bytes": self.budget_bytes}
+
+
 def _result(eval_fn, params, g, gt, history, n_epochs, dt, **extra):
     """Final full-graph val/test metrics + the shared engine result dict
     (both training engines report through this one contract)."""
@@ -52,13 +132,23 @@ def _result(eval_fn, params, g, gt, history, n_epochs, dt, **extra):
 
 def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
               n_epochs: int = 100, seed: int = 0, eval_every: int = 10,
-              verbose: bool = False, impl: str | None = None):
+              verbose: bool = False, impl: str | None = None,
+              bit_budget: float | None = None, autoprec_refresh: int = 0):
     """Returns dict(test_acc, val_acc, history, epochs_per_sec, params).
 
     ``impl`` (optional) reroutes the compression stack onto a specific
     kernel backend for the whole job — "jnp" | "interp" | "pallas" | "auto"
     (see :mod:`repro.core.backend`); codes are bit-identical across impls.
     Ignored when ``cfg.compression`` is None (fp32 baseline).
+
+    ``bit_budget`` (optional) turns on variance-guided adaptive precision
+    (:mod:`repro.core.autoprec`): the value is the average stash bits per
+    element (2.0 = the fixed-INT2 footprint), converted once to a byte
+    ceiling and split across layers by minimizing total expected SR
+    variance from first-epoch sensitivity stats.  ``autoprec_refresh=k``
+    re-collects stats and re-solves every k epochs (0 = allocate once);
+    a changed allocation re-jits the step.  The result dict then carries
+    ``bits_per_layer`` and ``bit_budget_bytes``.
     """
     if impl is not None:
         cfg = cfg.with_impl(impl)
@@ -69,18 +159,31 @@ def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
     gt = graph_tuple(g)
     tr_mask = g.train_mask.astype(jnp.float32)
 
-    @partial(jax.jit, donate_argnums=(0, 1), static_argnames=())
-    def step(params, state, epoch, gt, labels, tr_mask):
-        sr_seed = (epoch + 1).astype(jnp.uint32) * jnp.uint32(7919)
-        loss, grads = jax.value_and_grad(_loss_fn)(
-            params, gt, labels, tr_mask, cfg, sr_seed)
-        params, state = adamw_update(grads, state, params, opt)
-        return params, state, loss
+    ap = None
+    if bit_budget is not None:
+        ap = _Autoprec(gt, g.labels, tr_mask, cfg, bit_budget,
+                       autoprec_refresh, seed)
+        cfg, _ = ap.allocate(params)
 
+    def make_step(cfg):
+        @partial(jax.jit, donate_argnums=(0, 1), static_argnames=())
+        def step(params, state, epoch, gt, labels, tr_mask):
+            sr_seed = (epoch + 1).astype(jnp.uint32) * jnp.uint32(7919)
+            loss, grads = jax.value_and_grad(_loss_fn)(
+                params, gt, labels, tr_mask, cfg, sr_seed)
+            params, state = adamw_update(grads, state, params, opt)
+            return params, state, loss
+        return step
+
+    step = make_step(cfg)
     eval_fn = jax.jit(partial(_accuracy, cfg=cfg))
     history = []
     t0 = time.perf_counter()
     for epoch in range(n_epochs):
+        if ap is not None and ap.due(epoch):
+            cfg, changed = ap.allocate(params)
+            if changed:
+                step = make_step(cfg)
         params, state, loss = step(params, state, jnp.asarray(epoch), gt,
                                    g.labels, tr_mask)
         if verbose and (epoch % eval_every == 0 or epoch == n_epochs - 1):
@@ -88,7 +191,9 @@ def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
             history.append((epoch, float(loss), float(va)))
     jax.block_until_ready(params)
     dt = time.perf_counter() - t0
-    return _result(eval_fn, params, g, gt, history, n_epochs, dt)
+    extra = ap.extras() if ap is not None else {}
+    extra["cfg"] = cfg
+    return _result(eval_fn, params, g, gt, history, n_epochs, dt, **extra)
 
 
 def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
@@ -98,7 +203,8 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                       node_multiple: int = 64, edge_multiple: int = 256,
                       renormalize: bool = False, shuffle: bool = True,
                       batches=None, eval_every: int = 10,
-                      verbose: bool = False):
+                      verbose: bool = False, bit_budget: float | None = None,
+                      autoprec_refresh: int = 0):
     """Partition-sampled mini-batch GNN training (Cluster-GCN flavor).
 
     Splits ``g`` into ``n_parts`` padded subgraph batches (see
@@ -120,6 +226,13 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                  :func:`train_gnn`.
     batches      prebuilt ``SubgraphBatch`` list (skips partitioning —
                  lets benchmarks/tests reuse one sampling pass).
+    bit_budget / autoprec_refresh
+                 variance-guided adaptive per-layer precision, as in
+                 :func:`train_gnn` (budget = average stash bits/element).
+                 Sensitivity stats and the byte ceiling are computed on a
+                 single padded batch — the engine's live stash unit — so
+                 calibration never re-materializes full-graph activations;
+                 a refresh that changes the allocation re-jits the epoch.
 
     Per-batch activation seeds extend the full-graph scheme: batch ordinal
     ``b = epoch * n_parts + position`` gets ``sr_seed = (b + 1) * 7919``,
@@ -155,41 +268,56 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
     state = adamw_init(params, opt)
     stacked = stack_batches(batches)
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def epoch_step(params, state, epoch, grouped):
-        # grouped leaves: (n_updates, grad_accum, dp, ...)
-        def update(carry, inp):
-            params, state = carry
-            u, grp = inp
-            base = epoch * n_batches + u * group
+    ap = None
+    if bit_budget is not None:
+        # calibrate on one padded batch — the batched engine's live stash
+        # unit — so the probe never re-materializes full-graph activations
+        # (the budget is therefore per batch, matching the actual peak)
+        b0 = batches[0]
+        ap = _Autoprec(b0.graph_tuple(), b0.labels, b0.train_mask, cfg,
+                       bit_budget, autoprec_refresh, seed,
+                       node_mask=b0.node_mask)
+        cfg, _ = ap.allocate(params)
 
-            def micro(gsum, inp2):
-                a, mb = inp2
-                ords = base + a * dp + jnp.arange(dp)
-                seeds = (ords + 1).astype(jnp.uint32) * jnp.uint32(7919)
+    def make_epoch_step(cfg):
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def epoch_step(params, state, epoch, grouped):
+            # grouped leaves: (n_updates, grad_accum, dp, ...)
+            def update(carry, inp):
+                params, state = carry
+                u, grp = inp
+                base = epoch * n_batches + u * group
 
-                def group_loss(p):
-                    losses = jax.vmap(
-                        lambda b, s: _loss_fn(p, b.graph_tuple(), b.labels,
-                                              b.train_mask, cfg, s,
-                                              node_mask=b.node_mask)
-                    )(mb, seeds)
-                    return losses.mean()
+                def micro(gsum, inp2):
+                    a, mb = inp2
+                    ords = base + a * dp + jnp.arange(dp)
+                    seeds = (ords + 1).astype(jnp.uint32) * jnp.uint32(7919)
 
-                loss, grads = jax.value_and_grad(group_loss)(params)
-                return jax.tree.map(jnp.add, gsum, grads), loss
+                    def group_loss(p):
+                        losses = jax.vmap(
+                            lambda b, s: _loss_fn(p, b.graph_tuple(),
+                                                  b.labels,
+                                                  b.train_mask, cfg, s,
+                                                  node_mask=b.node_mask)
+                        )(mb, seeds)
+                        return losses.mean()
 
-            zeros = jax.tree.map(jnp.zeros_like, params)
-            gsum, losses = jax.lax.scan(
-                micro, zeros, (jnp.arange(grad_accum), grp))
-            grads = jax.tree.map(lambda x: x / grad_accum, gsum)
-            params, state = adamw_update(grads, state, params, opt)
-            return (params, state), losses.mean()
+                    loss, grads = jax.value_and_grad(group_loss)(params)
+                    return jax.tree.map(jnp.add, gsum, grads), loss
 
-        (params, state), losses = jax.lax.scan(
-            update, (params, state), (jnp.arange(n_updates), grouped))
-        return params, state, losses.mean()
+                zeros = jax.tree.map(jnp.zeros_like, params)
+                gsum, losses = jax.lax.scan(
+                    micro, zeros, (jnp.arange(grad_accum), grp))
+                grads = jax.tree.map(lambda x: x / grad_accum, gsum)
+                params, state = adamw_update(grads, state, params, opt)
+                return (params, state), losses.mean()
 
+            (params, state), losses = jax.lax.scan(
+                update, (params, state), (jnp.arange(n_updates), grouped))
+            return params, state, losses.mean()
+        return epoch_step
+
+    epoch_step = make_epoch_step(cfg)
     eval_fn = jax.jit(partial(_accuracy, cfg=cfg))
     gt = graph_tuple(g)
     order_rng = np.random.default_rng(seed ^ 0x5EEDBA5E)
@@ -208,6 +336,10 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
     history = []
     t0 = time.perf_counter()
     for epoch in range(n_epochs):
+        if ap is not None and ap.due(epoch):
+            cfg, changed = ap.allocate(params)
+            if changed:
+                epoch_step = make_epoch_step(cfg)
         if reshuffle:
             grouped = make_grouped(order_rng.permutation(n_batches))
         params, state, loss = epoch_step(params, state, jnp.asarray(epoch),
@@ -217,10 +349,11 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
             history.append((epoch, float(loss), float(va)))
     jax.block_until_ready(params)
     dt = time.perf_counter() - t0
+    extra = ap.extras() if ap is not None else {}
     return _result(eval_fn, params, g, gt, history, n_epochs, dt,
                    n_parts=n_batches, updates_per_epoch=n_updates,
                    batch_nodes=batches[0].n_nodes,
-                   batch_edges=batches[0].n_edges)
+                   batch_edges=batches[0].n_edges, cfg=cfg, **extra)
 
 
 def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
@@ -232,11 +365,13 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
     Full-graph keys (always present):
 
     * ``fp32_bytes`` — f32 input of every linear + f32 ReLU context;
-    * ``compressed_bytes`` / ``reduction`` (when ``cfg.compression`` is
-      set) — packed codes + one (zero, range) f32 pair per quantization
-      block + 1-bit ReLU masks;
+    * ``compressed_bytes`` / ``reduction`` / ``bits_per_layer`` (when any
+      layer is compressed) — packed codes + one (zero, range) f32 pair per
+      quantization block + word-aligned 1-bit ReLU masks; heterogeneous
+      (autoprec) configs report each layer at its own width, and layers
+      without compression contribute their fp32 bytes;
     * ``per_layer`` — the same accounting, one dict per GNN layer
-      (``layer``, ``fp32_bytes``[, ``compressed_bytes``]).
+      (``layer``, ``fp32_bytes``[, ``compressed_bytes``, ``bits``]).
 
     With ``n_parts > 1`` the mini-batch regime is modeled too: batches run
     sequentially, so the *peak* stash is a single padded batch.
@@ -249,22 +384,26 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
     ``peak_reduction_vs_full`` = full-graph saved bytes / per-batch peak.
     """
     per_layer = saved_bytes_per_layer(cfg, g.n_feats, g.n_nodes)
-    comp = cfg.compression
+    # mixed precision: a layer without compression contributes fp32 bytes
+    has_comp = any("compressed_bytes" in r for r in per_layer)
     total_fp32 = sum(r["fp32_bytes"] for r in per_layer)
     out = {"fp32_bytes": total_fp32, "per_layer": per_layer}
     full_saved = total_fp32
-    if comp is not None:
-        total_c = sum(r["compressed_bytes"] for r in per_layer)
+    if has_comp:
+        total_c = sum(r.get("compressed_bytes", r["fp32_bytes"])
+                      for r in per_layer)
         out["compressed_bytes"] = total_c
         out["reduction"] = 1.0 - total_c / total_fp32
+        out["bits_per_layer"] = [r.get("bits") for r in per_layer]
         full_saved = total_c
     if n_parts > 1:
         if batch_nodes is None:
             batch_nodes = _bucket(-(-g.n_nodes // n_parts), node_multiple)
         rows_b = saved_bytes_per_layer(cfg, g.n_feats, batch_nodes)
         peak_fp32 = sum(r["fp32_bytes"] for r in rows_b)
-        peak = (sum(r["compressed_bytes"] for r in rows_b)
-                if comp is not None else peak_fp32)
+        peak = (sum(r.get("compressed_bytes", r["fp32_bytes"])
+                    for r in rows_b)
+                if has_comp else peak_fp32)
         out["batched"] = {
             "n_parts": n_parts, "batch_nodes": batch_nodes,
             "peak_fp32_bytes": peak_fp32, "peak_saved_bytes": peak,

@@ -48,9 +48,15 @@ def _graph_main(args):
     r = train_gnn_batched(
         g, cfg, n_parts=args.graph_batches, n_epochs=args.steps,
         opt=AdamWConfig(lr=lr, weight_decay=0.0), seed=0,
-        halo=args.graph_halo, mesh=mesh, verbose=True)
+        halo=args.graph_halo, mesh=mesh, verbose=True,
+        bit_budget=args.bit_budget, autoprec_refresh=args.autoprec_refresh)
+    cfg = r.get("cfg", cfg)   # autoprec may have re-allocated per-layer bits
     rep = activation_memory_report(g, cfg, n_parts=args.graph_batches,
                                    batch_nodes=r["batch_nodes"])
+    if "bits_per_layer" in r:
+        print(f"autoprec: budget={args.bit_budget} avg bits "
+              f"({r['bit_budget_bytes']} stash bytes) -> per-layer bits "
+              f"{r['bits_per_layer']}")
     print(f"{g.name}: {g.n_nodes} nodes -> {r['n_parts']} batches of "
           f"{r['batch_nodes']} padded nodes, "
           f"{r['updates_per_epoch']} updates/epoch")
@@ -101,6 +107,14 @@ def main(argv=None):
     ap.add_argument("--graph-arch", default="sage", choices=["sage", "gcn"])
     ap.add_argument("--graph-halo", type=int, default=0,
                     help="hops of in-neighborhood halo around each partition")
+    ap.add_argument("--bit-budget", type=float, default=None,
+                    help="variance-guided adaptive precision: average stash "
+                         "bits per element (2.0 = the fixed-INT2 footprint); "
+                         "per-layer widths are solved by core.autoprec "
+                         "(--graph-batches path)")
+    ap.add_argument("--autoprec-refresh", type=int, default=0,
+                    help="re-collect sensitivity stats and re-solve the "
+                         "allocation every N epochs (0 = allocate once)")
     args = ap.parse_args(argv)
 
     if args.graph_batches:

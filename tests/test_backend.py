@@ -179,6 +179,35 @@ def test_compressor_does_not_bypass_dispatch():
     assert not hits, f"compressor bypasses the dispatch layer: {hits}"
 
 
+def test_mixed_bit_stash_roundtrip_parity():
+    """Satellite: a stash written with per-layer bits {1, 2, 4, 8} (the
+    autoprec output) must round-trip across ``impl in {jnp, interp}`` with
+    bit-identical packed words and bit-identical reconstructions."""
+    base = CompressionConfig(bits=2, group_size=64)
+    cfg = GNNConfig(hidden=(32, 32, 32), compression=base)
+    per = cfg.with_layer_bits((1, 2, 4, 8)).layer_compression()
+    assert [c.bits for c in per] == [1, 2, 4, 8]
+    for li, comp in enumerate(per):
+        x = jax.random.normal(jax.random.PRNGKey(li), (9, 64)) * (li + 1.3)
+        ca = compress(x, comp, li * 1013, impl="jnp")
+        cb = compress(x, comp, li * 1013, impl="interp")
+        np.testing.assert_array_equal(np.asarray(ca.packed),
+                                      np.asarray(cb.packed))
+        # same stash through either dequant impl: equal codes, float math
+        # agrees to fusion order (XLA may fma one path)
+        for writer in (ca, cb):
+            dj = decompress(writer, impl="jnp")
+            di = decompress(writer, impl="interp")
+            np.testing.assert_allclose(np.asarray(dj), np.asarray(di),
+                                       atol=1e-5)
+        # cross-writer on one dequant impl is bit-exact: identical packed
+        # words in, identical reconstruction out
+        for impl in ("jnp", "interp"):
+            np.testing.assert_array_equal(
+                np.asarray(decompress(ca, impl=impl)),
+                np.asarray(decompress(cb, impl=impl)))
+
+
 # ---------------------------------------------------------- training level
 @pytest.mark.parametrize("impl", ["jnp", "interp"])
 def test_train_gnn_end_to_end_under_both_backends(impl):

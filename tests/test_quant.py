@@ -122,6 +122,43 @@ def test_compressed_nbytes_shrinks_with_group_size():
     assert ct.nbytes < 0.05 * x.size * 4
 
 
+def test_counter_base_wraparound_safe():
+    """Satellite bugfix: ``counter_base`` >= 2**32 used to wrap the uint32
+    counter back onto base 0, silently reusing the SR noise stream.  The
+    high word is now folded into the seed via the counter PRNG, so disjoint
+    counter ranges (including ones 2**32 apart) draw decorrelated streams.
+    """
+    lv = quantmod.uniform_levels(2)
+    h = jnp.full((4, 64), 1.5)  # mid-bin: codes are pure Bernoulli draws
+    c0 = quantmod.stochastic_round_to_levels(h, lv, 7, counter_base=0)
+    # same range re-drawn -> identical (determinism unchanged)
+    np.testing.assert_array_equal(
+        np.asarray(c0),
+        np.asarray(quantmod.stochastic_round_to_levels(h, lv, 7,
+                                                       counter_base=0)))
+    # disjoint low-word ranges were always decorrelated
+    c_lo = quantmod.stochastic_round_to_levels(h, lv, 7, counter_base=h.size)
+    assert not np.array_equal(np.asarray(c0), np.asarray(c_lo))
+    # bases 2**32 apart used to alias base 0 exactly; must differ now
+    c_hi = quantmod.stochastic_round_to_levels(h, lv, 7, counter_base=1 << 32)
+    assert not np.array_equal(np.asarray(c0), np.asarray(c_hi))
+    # and distinct high words must not alias each other either
+    c_hi2 = quantmod.stochastic_round_to_levels(h, lv, 7, counter_base=2 << 32)
+    assert not np.array_equal(np.asarray(c_hi), np.asarray(c_hi2))
+    # a chunk straddling a 2**32 boundary: the wrapped tail lands on low
+    # counters 0.. but with a carried high word, so it must not replay the
+    # base-0 stream (the old uint32 add aliased it exactly)
+    n = h.size
+    c_straddle = quantmod.stochastic_round_to_levels(
+        h, lv, 7, counter_base=(1 << 32) - n // 2)
+    tail = np.asarray(c_straddle).reshape(-1)[n // 2:]
+    head_of_zero = np.asarray(c0).reshape(-1)[:n - n // 2]
+    assert not np.array_equal(tail, head_of_zero)
+    # all streams stay unbiased Bernoulli(0.5)-ish draws
+    for c in (c0, c_lo, c_hi, c_hi2, c_straddle):
+        assert 0.2 < float(jnp.mean(c % 2)) < 0.8
+
+
 @given(st.integers(0, 1000))
 @settings(max_examples=10, deadline=None)
 def test_quant_dequant_idempotent_on_levels(seed):

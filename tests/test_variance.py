@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 
+from repro.core.compressor import CompressionConfig
 from repro.core.variance import (clipped_normal_params, expected_sr_variance,
                                  expected_sr_variance_uniform, js_divergence,
                                  model_histogram, optimize_levels,
@@ -51,6 +52,34 @@ def test_optimal_levels_symmetric():
     """CN is symmetric about B/2, so α* + β* ≈ B."""
     lv = optimize_levels(128, 2)
     assert abs((lv[1] + lv[2]) - 3.0) < 0.02
+
+
+def test_levels_default_uses_post_rp_dim():
+    """Without RP the CN dimension is the block size; with RP it must be
+    the *projected* block size (paper App. C uses the projected row dim)."""
+    no_rp = CompressionConfig(bits=2, group_size=256, vm=True)
+    assert no_rp.cn_dim() == 256
+    assert no_rp.levels() == optimize_levels(256, 2)
+    with_rp = CompressionConfig(bits=2, group_size=256, rp_ratio=8, vm=True)
+    assert with_rp.cn_dim() == 32
+    assert with_rp.levels() == optimize_levels(32, 2)
+    # explicit vm_dim always wins over the default
+    pinned = CompressionConfig(bits=2, group_size=256, rp_ratio=8, vm=True,
+                               vm_dim=64)
+    assert pinned.levels() == optimize_levels(64, 2)
+
+
+def test_levels_vm_dim_zero_rejected_not_silently_defaulted():
+    """``vm_dim or group_size`` treated 0 as unset; now only ``None`` is
+    the sentinel and degenerate explicit values raise."""
+    cfg = CompressionConfig(bits=2, group_size=64, vm=True, vm_dim=0)
+    with pytest.raises(ValueError, match="vm_dim"):
+        cfg.levels()
+    with pytest.raises(ValueError, match="vm_dim"):
+        CompressionConfig(bits=2, group_size=64, vm=True, vm_dim=1).cn_dim()
+    # tiny groups with large rp_ratio clamp the default to a valid D
+    assert CompressionConfig(bits=2, group_size=8, rp_ratio=8,
+                             vm=True).cn_dim() == 2
 
 
 def test_js_divergence_basic():
