@@ -19,8 +19,19 @@ from repro.optim import AdamWConfig, adamw_init
 
 
 def act_bytes_per_layer(cfg, batch, seq):
-    """Residual-stream stash per layer: fp32/bf16 vs block-INT2."""
-    full = batch * seq * cfg.d_model * 2  # bf16
+    """Residual-stream stash per layer: uncompressed vs block-INT2.
+
+    The uncompressed baseline is sized from the config's actual
+    activation dtype, not a hard-coded 2 bytes/elt, so an fp32 run
+    doesn't under-report what compression is saving.  The residual
+    stream is ``ArchConfig.act_dtype`` (the embed dtype) promoted
+    against the bf16 dense weights — that promotion is what actually
+    flows through the layer scan (e.g. float16 embeds still yield an
+    f32 stream).
+    """
+    act = jnp.dtype(getattr(cfg, "act_dtype", "bfloat16"))
+    itemsize = jnp.promote_types(act, jnp.bfloat16).itemsize
+    full = batch * seq * cfg.d_model * itemsize
     comp = cfg.act_compression or CompressionConfig(2, 256)
     packed = packed_nbytes((batch, seq, cfg.d_model), comp.bits,
                            comp.group_size)

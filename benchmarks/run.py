@@ -12,8 +12,8 @@ import traceback
 def main() -> None:
     from benchmarks import (autoprec, fig3_variance_surface,
                             fig5_vm_dimensionality, gnn_batched,
-                            kernel_throughput, lm_act_compression, roofline,
-                            table1_gnn, table2_distribution)
+                            kernel_throughput, lm_act_compression, offload,
+                            roofline, table1_gnn, table2_distribution)
 
     suites = [
         ("fig3", fig3_variance_surface.main),
@@ -24,6 +24,7 @@ def main() -> None:
         ("table1", table1_gnn.main),
         ("gnn_batched", gnn_batched.main),  # writes BENCH_gnn_batched.json
         ("autoprec", autoprec.main),  # writes BENCH_autoprec.json
+        ("offload", offload.main),  # writes BENCH_offload.json
         ("roofline", roofline.main),
     ]
     print("name,us_per_call,derived")

@@ -42,6 +42,16 @@ class ArchConfig:
     # training integration
     act_mode: str = "remat"         # none | remat | act
     act_compression: CompressionConfig | None = None
+    # host offload of the act-mode stash (None | "host" | "pinned-paged"):
+    # compressed_block residuals become host-store tickets so the lax.scan
+    # layer loop carries words per layer, not code arrays (repro.offload)
+    act_offload: str | None = None
+    # dtype the embedding table initializes to — the residual stream
+    # inherits it, promoted against the bf16 dense weights (bf16 stays
+    # bf16, float32 stays float32, float16 promotes to float32); the
+    # activation-memory ledgers size the uncompressed baseline from the
+    # promoted dtype
+    act_dtype: str = "bfloat16"
     aux_loss_weight: float = 0.01
     # chunking knobs (perf-tunable; see EXPERIMENTS.md §Perf)
     k_chunk: int = 1024

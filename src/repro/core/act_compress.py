@@ -18,6 +18,15 @@ Kernel backend: every primitive honors ``cfg.impl`` (routed through
 the concrete backend it was written with, so the backward pass decompresses
 on the same path even across ``custom_vjp`` residuals and scan carries.
 A ``backend.use_impl`` context at trace time overrides all of it.
+
+Where the residuals *live* is a separate axis: ``offload=`` on
+:func:`compressed_matmul` / :func:`compressed_block` moves the compressed
+stash to host between forward and backward through
+:mod:`repro.offload.engine` (the residual becomes a tiny
+:class:`~repro.offload.engine.HostStash` ticket — scan-stackable, so the
+transformer layer loop carries words, not code arrays).  Pooled multi-layer
+storage — one contiguous arena for *all* layers' stashes — lives one level
+up in :mod:`repro.offload.arena` / :mod:`repro.offload.gnn`.
 """
 from __future__ import annotations
 
@@ -30,25 +39,45 @@ import numpy as np
 from repro.core.compressor import CompressionConfig, compress, decompress
 
 
+def _maybe_offload(ct, seed, offload):
+    """Residual placement: the CompressedTensor itself ("device"/None) or a
+    host-store ticket (host policies; see repro.offload.engine)."""
+    if offload in (None, "device"):
+        return ct
+    from repro.offload import engine
+
+    engine.check_policy(offload)
+    return engine.offload_compressed(ct, seed)
+
+
+def _maybe_fetch(res, offload):
+    if offload in (None, "device"):
+        return res
+    from repro.offload import engine
+
+    return engine.fetch_compressed(res)
+
+
 def _zero_ct(x):
     """Cotangent for a non-differentiable (integer) input."""
     return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
 
 
 # ---------------------------------------------------------------- matmul
-@partial(jax.custom_vjp, nondiff_argnums=(3,))
-def compressed_matmul(x, w, seed, cfg: CompressionConfig):
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def compressed_matmul(x, w, seed, cfg: CompressionConfig, offload=None):
     return x @ w
 
 
-def _cm_fwd(x, w, seed, cfg):
+def _cm_fwd(x, w, seed, cfg, offload):
     y = x @ w
-    return y, (compress(x, cfg, seed), w, seed)
+    ct = _maybe_offload(compress(x, cfg, seed), seed, offload)
+    return y, (ct, w, seed)
 
 
-def _cm_bwd(cfg, res, g):
+def _cm_bwd(cfg, offload, res, g):
     ct, w, seed = res
-    x_hat = decompress(ct)
+    x_hat = decompress(_maybe_fetch(ct, offload))
     dx = g @ w.T
     x2 = x_hat.reshape(-1, x_hat.shape[-1])
     g2 = g.reshape(-1, g.shape[-1])
@@ -87,12 +116,18 @@ def compressed_elementwise(fn, x, seed, cfg: CompressionConfig):
 
 
 # ----------------------------------------------------------------- block
-def compressed_block(f, cfg: CompressionConfig):
+def compressed_block(f, cfg: CompressionConfig, offload: str | None = None):
     """Wrap ``f(x, params) -> y``: store compressed x, recompute f in bwd.
 
     Equivalent memory profile to ``jax.checkpoint`` except the stashed block
     input itself is block-quantized (the paper's technique applied at the
     residual-stream level).  Returns ``g(x, params, seed) -> y``.
+
+    ``offload`` ("host" | "pinned-paged") parks the compressed stash in
+    the host store between forward and backward: under ``lax.scan`` the
+    per-layer residual is then a scan-stackable ticket instead of the
+    code arrays, so the layer loop's saved state shrinks to a few words
+    per layer (seeds must be distinct per layer — they key the store).
     """
 
     @jax.custom_vjp
@@ -101,11 +136,12 @@ def compressed_block(f, cfg: CompressionConfig):
 
     def g_fwd(x, params, seed):
         y = f(x, params)
-        return y, (compress(x, cfg, seed), params, seed)
+        ct = _maybe_offload(compress(x, cfg, seed), seed, offload)
+        return y, (ct, params, seed)
 
     def g_bwd(res, ct_y):
         ctens, params, seed = res
-        x_hat = decompress(ctens)
+        x_hat = decompress(_maybe_fetch(ctens, offload))
         _, vjp = jax.vjp(f, x_hat, params)
         dx, dparams = vjp(ct_y)
         return dx, dparams, _zero_ct(seed)

@@ -105,7 +105,13 @@ class CompressedTensor:
 
     @property
     def nbytes(self) -> int:
-        return int(self.packed.size * 4 + self.zero.size * 4 + self.rng.size * 4)
+        """Exact stored bytes: every child array at its actual itemsize
+        (including the ``rp_seed`` scalar), so the ledger in
+        ``analysis.saved_bytes_per_layer`` and the arena planner agree
+        with the live residuals to the byte."""
+        return int(sum(f.size * jnp.dtype(f.dtype).itemsize
+                       for f in (self.packed, self.zero, self.rng,
+                                 self.rp_seed)))
 
     @property
     def uncompressed_nbytes(self) -> int:

@@ -1,7 +1,8 @@
 """GNN substrate: the paper's own experimental domain (GCN / GraphSAGE),
 full-graph and partition-sampled mini-batch training."""
 from repro.graph.analysis import collect_layer_stats
-from repro.graph.data import Graph, arxiv_like, flickr_like, synthetic_graph
+from repro.graph.data import (Graph, arxiv_like, cora_like, flickr_like,
+                              synthetic_graph)
 from repro.graph.models import GNNConfig, gnn_forward, init_gnn_params
 from repro.graph.sampling import (SubgraphBatch, bfs_partition,
                                   make_subgraph_batches, random_partition,
@@ -10,7 +11,7 @@ from repro.graph.train import (activation_memory_report, train_gnn,
                                train_gnn_batched)
 
 __all__ = [
-    "Graph", "arxiv_like", "flickr_like", "synthetic_graph",
+    "Graph", "arxiv_like", "cora_like", "flickr_like", "synthetic_graph",
     "GNNConfig", "gnn_forward", "init_gnn_params",
     "SubgraphBatch", "bfs_partition", "random_partition",
     "make_subgraph_batches", "stack_batches",

@@ -53,8 +53,10 @@ def saved_bytes_per_layer(cfg: GNNConfig, in_dim: int,
         comp = per_layer[li]
         if comp is not None:
             d_eff = lin_in // comp.rp_ratio if comp.rp_ratio > 1 else lin_in
+            # + 4: the uint32 rp_seed scalar every CompressedTensor stores
+            # (CompressedTensor.nbytes counts it, so the model must too)
             c = packmod.packed_nbytes((n_nodes, d_eff), comp.bits,
-                                      comp.group_size)
+                                      comp.group_size) + 4
             if hidden:
                 c += relu_mask_nbytes(n_nodes * d_out)  # 1-bit ReLU mask
             row["compressed_bytes"] = c

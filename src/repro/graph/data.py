@@ -121,6 +121,20 @@ def arxiv_like(scale: float = 0.1, seed: int = 0) -> Graph:
                            feature_noise=2.0, seed=seed)
 
 
+def cora_like(scale: float = 1.0, seed: int = 0) -> Graph:
+    """Cora stand-in: 2,708 nodes / ~10.5K edges / 128 feats / 7 classes.
+
+    The classic citation-network smoke config — small enough that offload
+    parity gates (host-vs-device loss trajectories) run in seconds on
+    CPU, with the real datasets' class count and edge density.  Feature
+    dim is 128 (not Cora's 1433 bag-of-words) to keep CPU matmuls cheap.
+    """
+    n = max(256, int(2_708 * scale))
+    e = max(4 * n, int(10_556 * scale))
+    return synthetic_graph("cora-like", n, e, 128, 7, homophily=0.6,
+                           feature_noise=1.5, seed=seed)
+
+
 def flickr_like(scale: float = 0.1, seed: int = 0) -> Graph:
     """Flickr stand-in: 89,250 nodes / ~900K edges / 500 feats / 7 classes.
 

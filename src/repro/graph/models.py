@@ -145,7 +145,7 @@ def _maybe_compressed_matmul(x, w, comp: CompressionConfig | None, seed):
 
 
 def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None,
-                node_mask=None):
+                node_mask=None, plan=None, offload=None):
     """graph = (features, src, dst, gcn_w, mean_w).
 
     ``node_mask`` ((N,) f32, optional) marks valid rows of a padded subgraph
@@ -154,7 +154,21 @@ def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None,
     sign masks) see clean zeros on padding instead of bias leakage, and
     quantization block statistics stay unpolluted.  ``None`` (full graph)
     is the existing behavior, bit for bit.
+
+    ``plan`` (a :class:`repro.offload.arena.StashPlan`, optional) reroutes
+    every layer's saved-for-backward stash through the pooled arena under
+    the ``offload`` policy ("device" | "host" | "pinned-paged" — see
+    :mod:`repro.offload.engine`); forward values and stash bits are
+    identical to the per-tensor path.
     """
+    if plan is not None:
+        if dropout_key is not None and cfg.dropout:
+            raise ValueError("arena-routed forward does not support dropout")
+        from repro.offload.gnn import arena_gnn_forward
+
+        return arena_gnn_forward(params, graph, cfg, plan, seed=seed,
+                                 node_mask=node_mask,
+                                 policy=offload or "device")
     feats, src, dst, gcn_w, mean_w = graph
     n = feats.shape[0]  # static under jit
     h = feats if node_mask is None else feats * node_mask[:, None]

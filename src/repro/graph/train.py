@@ -22,6 +22,9 @@ import jax.numpy as jnp
 
 from repro.core import autoprec
 from repro.core.compressor import CompressionConfig
+from repro.offload import (check_policy, device_resident_stash_bytes,
+                           device_memory_stats, measure_live_bytes,
+                           plan_gnn_stashes)
 from repro.graph.analysis import collect_layer_stats, saved_bytes_per_layer
 from repro.graph.data import Graph
 from repro.graph.models import GNNConfig, gnn_forward, graph_tuple, init_gnn_params
@@ -30,8 +33,10 @@ from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.parallel.sharding import dp_size, graph_batch_pspecs, to_named
 
 
-def _loss_fn(params, graph, labels, mask, cfg, seed, node_mask=None):
-    logits = gnn_forward(params, graph, cfg, seed=seed, node_mask=node_mask)
+def _loss_fn(params, graph, labels, mask, cfg, seed, node_mask=None,
+             plan=None, offload=None):
+    logits = gnn_forward(params, graph, cfg, seed=seed, node_mask=node_mask,
+                         plan=plan, offload=offload)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
     return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1)
@@ -133,7 +138,8 @@ def _result(eval_fn, params, g, gt, history, n_epochs, dt, **extra):
 def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
               n_epochs: int = 100, seed: int = 0, eval_every: int = 10,
               verbose: bool = False, impl: str | None = None,
-              bit_budget: float | None = None, autoprec_refresh: int = 0):
+              bit_budget: float | None = None, autoprec_refresh: int = 0,
+              offload: str | None = None):
     """Returns dict(test_acc, val_acc, history, epochs_per_sec, params).
 
     ``impl`` (optional) reroutes the compression stack onto a specific
@@ -149,7 +155,15 @@ def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
     re-collects stats and re-solves every k epochs (0 = allocate once);
     a changed allocation re-jits the step.  The result dict then carries
     ``bits_per_layer`` and ``bit_budget_bytes``.
+
+    ``offload`` (optional) routes every layer's saved-for-backward stash
+    through one pooled arena (:mod:`repro.offload`): "device" keeps the
+    arena on device, "host"/"pinned-paged" move each layer's segments to
+    host after the forward stash and prefetch them one layer ahead of
+    the backward walk.  Stash bits and the loss trajectory are identical
+    across policies.
     """
+    offload = check_policy(offload)
     if impl is not None:
         cfg = cfg.with_impl(impl)
     opt = opt or AdamWConfig(lr=5e-3, weight_decay=0.0)
@@ -166,10 +180,14 @@ def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
         cfg, _ = ap.allocate(params)
 
     def make_step(cfg):
+        plan = (plan_gnn_stashes(cfg, g.n_feats, g.n_nodes)
+                if offload is not None else None)
+        loss_fn = partial(_loss_fn, plan=plan, offload=offload)
+
         @partial(jax.jit, donate_argnums=(0, 1), static_argnames=())
         def step(params, state, epoch, gt, labels, tr_mask):
             sr_seed = (epoch + 1).astype(jnp.uint32) * jnp.uint32(7919)
-            loss, grads = jax.value_and_grad(_loss_fn)(
+            loss, grads = jax.value_and_grad(loss_fn)(
                 params, gt, labels, tr_mask, cfg, sr_seed)
             params, state = adamw_update(grads, state, params, opt)
             return params, state, loss
@@ -204,7 +222,7 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                       renormalize: bool = False, shuffle: bool = True,
                       batches=None, eval_every: int = 10,
                       verbose: bool = False, bit_budget: float | None = None,
-                      autoprec_refresh: int = 0):
+                      autoprec_refresh: int = 0, offload: str | None = None):
     """Partition-sampled mini-batch GNN training (Cluster-GCN flavor).
 
     Splits ``g`` into ``n_parts`` padded subgraph batches (see
@@ -233,6 +251,12 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                  single padded batch — the engine's live stash unit — so
                  calibration never re-materializes full-graph activations;
                  a refresh that changes the allocation re-jits the epoch.
+    offload      pooled-arena stash routing per batch, as in
+                 :func:`train_gnn` ("device" | "host" | "pinned-paged");
+                 the plan is laid out for one padded batch — the engine's
+                 live stash unit.  Host policies require an unsharded run
+                 (``dp_size(mesh) == 1``): the host store is keyed per
+                 forward, not per shard.
 
     Per-batch activation seeds extend the full-graph scheme: batch ordinal
     ``b = epoch * n_parts + position`` gets ``sr_seed = (b + 1) * 7919``,
@@ -243,6 +267,7 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
     plus ``n_parts``, ``updates_per_epoch``, ``batch_nodes``,
     ``batch_edges``.
     """
+    offload = check_policy(offload)
     if impl is not None:
         cfg = cfg.with_impl(impl)
     opt = opt or AdamWConfig(lr=5e-3, weight_decay=0.0)
@@ -256,6 +281,10 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                          f"but n_parts={n_parts}")
     n_batches = len(batches)
     dp = dp_size(mesh) if mesh is not None else 1
+    if offload in ("host", "pinned-paged") and dp > 1:
+        raise ValueError(
+            f"offload={offload!r} needs an unsharded run (dp_size==1); "
+            f"got dp={dp}")
     group = dp * grad_accum
     if n_batches % group:
         raise ValueError(
@@ -280,6 +309,9 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
         cfg, _ = ap.allocate(params)
 
     def make_epoch_step(cfg):
+        plan = (plan_gnn_stashes(cfg, g.n_feats, batches[0].n_nodes)
+                if offload is not None else None)
+
         @partial(jax.jit, donate_argnums=(0, 1))
         def epoch_step(params, state, epoch, grouped):
             # grouped leaves: (n_updates, grad_accum, dp, ...)
@@ -298,7 +330,8 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                             lambda b, s: _loss_fn(p, b.graph_tuple(),
                                                   b.labels,
                                                   b.train_mask, cfg, s,
-                                                  node_mask=b.node_mask)
+                                                  node_mask=b.node_mask,
+                                                  plan=plan, offload=offload)
                         )(mb, seeds)
                         return losses.mean()
 
@@ -358,7 +391,8 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
 
 def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
                              batch_nodes: int | None = None,
-                             node_multiple: int = 64) -> dict:
+                             node_multiple: int = 64,
+                             offload: str | None = None) -> dict:
     """Bytes of *saved-for-backward* activations — the paper's Table-1 "M"
     column model, per layer and (optionally) per subgraph batch.
 
@@ -382,6 +416,16 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
     ``peak_fp32_bytes``, ``peak_saved_bytes`` (compressed when configured),
     a per-batch-size ``per_layer`` breakdown, and
     ``peak_reduction_vs_full`` = full-graph saved bytes / per-batch peak.
+
+    With ``offload`` set ("device" | "host" | "pinned-paged") an ``arena``
+    sub-dict is added: the pooled-arena ledger from the
+    :class:`repro.offload.arena.StashPlan` (``planned_bytes`` split into
+    u32/f32 arenas, per-layer rows) plus the *measured* device-peak
+    column — ``device_resident_bytes`` is the ledger model of what stays
+    on device under the policy (whole arena, or the double-buffered
+    two-layer prefetch window for host policies), validated best-effort
+    against ``jax.live_arrays`` (``measured_live_bytes``) and the
+    backend's device memory stats where the platform exposes them.
     """
     per_layer = saved_bytes_per_layer(cfg, g.n_feats, g.n_nodes)
     # mixed precision: a layer without compression contributes fp32 bytes
@@ -410,5 +454,26 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
             "full_graph_saved_bytes": full_saved,
             "peak_reduction_vs_full": full_saved / peak,
             "per_layer": rows_b,
+        }
+    if offload is not None:
+        offload = check_policy(offload)
+        # an explicit batch_nodes wins even at n_parts == 1: the batched
+        # engine pads its single batch, and the ledger must describe the
+        # plan training actually laid out
+        stash_nodes = batch_nodes if batch_nodes is not None else g.n_nodes
+        plan = plan_gnn_stashes(cfg, g.n_feats, stash_nodes)
+        stats = device_memory_stats()
+        out["arena"] = {
+            "policy": offload,
+            "stash_nodes": stash_nodes,
+            "planned_bytes": plan.total_bytes,
+            "u32_bytes": plan.u32_bytes,
+            "f32_bytes": plan.f32_bytes,
+            "per_layer": plan.per_layer_rows(),
+            "device_resident_bytes":
+                device_resident_stash_bytes(plan, offload),
+            "measured_live_bytes": measure_live_bytes(),
+            "device_peak_bytes":
+                stats.get("peak_bytes_in_use") if stats else None,
         }
     return out

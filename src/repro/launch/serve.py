@@ -24,6 +24,34 @@ from repro.launch.steps import make_serve_step
 from repro.models import Model
 
 
+def _stash_prompt_context(params, prompts, policy: str) -> dict:
+    """Serving-side arena exercise: park the batch's prompt embeddings in
+    a compressed stash arena under ``policy`` and read them back.
+
+    This is the read path a compressed prompt-context cache would use
+    (stash at prefill, decompress on a later turn); it drives
+    ``stash_write`` → offload → prefetch → ``stash_read`` → decompress
+    end-to-end outside the training engines.
+    """
+    from repro.core.compressor import CompressionConfig, compress, decompress
+    from repro.offload import arena, engine
+
+    h0 = jnp.take(params["embed"], jnp.asarray(prompts),
+                  axis=0).astype(jnp.float32)
+    comp = CompressionConfig(bits=2, group_size=256)
+    plan = arena.plan_stashes((tuple(h0.shape),), (comp,))
+    writer = engine.make_writer(plan, policy, jnp.uint32(0x5E12))
+    writer.put_ct(0, compress(h0, comp, jnp.uint32(7919)))
+    reader = engine.make_reader(plan, policy, writer.residual())
+    reader.prefetch(0)
+    h_rec = decompress(reader.get_ct(0))
+    err = float(jnp.mean((h_rec - h0) ** 2) / jnp.maximum(
+        jnp.mean(h0 ** 2), 1e-12))
+    return {"policy": policy, "arena_bytes": plan.total_bytes,
+            "full_bytes": int(h0.nbytes), "rel_mse": err,
+            "shape_ok": h_rec.shape == h0.shape}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -32,6 +60,12 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--offload", default=None,
+                    choices=["device", "host", "pinned-paged"],
+                    help="also stash each batch's prompt embeddings in a "
+                         "compressed arena under this policy and read "
+                         "them back (exercises the serving-side arena "
+                         "read path)")
     args = ap.parse_args(argv)
 
     cfg = get(args.arch)
@@ -45,10 +79,15 @@ def main(argv=None):
 
     done, t_prefill, t_decode, n_decoded = 0, 0.0, 0.0, 0
     outputs = []
+    stash_report = None
     while done < args.requests:
         n = min(args.batch, args.requests - done)
         prompts = batch_for_step(cfg.vocab, n, args.prompt_len,
                                  step=done, seed=11)
+        if args.offload and stash_report is None:
+            stash_report = _stash_prompt_context(params, prompts,
+                                                 args.offload)
+            assert stash_report["shape_ok"], stash_report
         kwargs = {}
         if cfg.family == "encdec":
             kwargs["enc_embeds"] = jax.random.normal(
@@ -72,6 +111,11 @@ def main(argv=None):
         done += n
     print(f"served {done} requests: prefill {t_prefill:.2f}s total, "
           f"decode {n_decoded / max(t_decode, 1e-9):.1f} tok/s")
+    if stash_report is not None:
+        print(f"prompt-context stash[{stash_report['policy']}]: "
+              f"{stash_report['arena_bytes']} B arena vs "
+              f"{stash_report['full_bytes']} B raw, "
+              f"rel_mse={stash_report['rel_mse']:.4f}")
     return outputs
 
 

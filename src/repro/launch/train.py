@@ -45,14 +45,23 @@ def _graph_main(args):
     mesh = (make_production_mesh() if args.production_mesh
             else make_local_mesh())
     lr = args.lr if args.lr is not None else 5e-3   # GNN engines' default
+    offload = None if args.offload == "none" else args.offload
     r = train_gnn_batched(
         g, cfg, n_parts=args.graph_batches, n_epochs=args.steps,
         opt=AdamWConfig(lr=lr, weight_decay=0.0), seed=0,
         halo=args.graph_halo, mesh=mesh, verbose=True,
-        bit_budget=args.bit_budget, autoprec_refresh=args.autoprec_refresh)
+        bit_budget=args.bit_budget, autoprec_refresh=args.autoprec_refresh,
+        offload=offload)
     cfg = r.get("cfg", cfg)   # autoprec may have re-allocated per-layer bits
     rep = activation_memory_report(g, cfg, n_parts=args.graph_batches,
-                                   batch_nodes=r["batch_nodes"])
+                                   batch_nodes=r["batch_nodes"],
+                                   offload=offload)
+    if "arena" in rep:
+        a = rep["arena"]
+        print(f"stash arena[{a['policy']}]: {a['planned_bytes'] / 1e6:.2f} MB "
+              f"pooled ({a['u32_bytes'] / 1e6:.2f} u32 + "
+              f"{a['f32_bytes'] / 1e6:.2f} f32), "
+              f"device-resident {a['device_resident_bytes'] / 1e6:.2f} MB")
     if "bits_per_layer" in r:
         print(f"autoprec: budget={args.bit_budget} avg bits "
               f"({r['bit_budget_bytes']} stash bytes) -> per-layer bits "
@@ -91,6 +100,14 @@ def main(argv=None):
                     choices=["auto", "jnp", "interp", "pallas"],
                     help="kernel backend for the compression stack "
                          "(core.backend dispatch; 'auto' = pallas on TPU)")
+    ap.add_argument("--offload", default="none",
+                    choices=["none", "device", "host", "pinned-paged"],
+                    help="where saved-for-backward stashes live "
+                         "(repro.offload): 'device' pools them in one "
+                         "arena (--graph-batches path), 'host'/'pinned-"
+                         "paged' additionally park segments in host "
+                         "memory between forward and backward (LM path: "
+                         "per-layer host stash under the scan)")
     ap.add_argument("--opt-bits", type=int, default=0, choices=[0, 8])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -130,6 +147,10 @@ def main(argv=None):
                                  impl=args.act_impl)
         cfg = dataclasses.replace(cfg, act_mode=args.act_mode,
                                   act_compression=comp)
+    if args.offload in ("host", "pinned-paged"):
+        # "device" is a no-op for the LM path: without a multi-layer arena
+        # the per-layer residual already is the device placement
+        cfg = dataclasses.replace(cfg, act_offload=args.offload)
 
     mesh = (make_production_mesh() if args.production_mesh
             else make_local_mesh())

@@ -139,7 +139,9 @@ class Model:
     def init(self, key):
         cfg = self.cfg
         keys = jax.random.split(key, 8)
-        params = {"embed": embed_init(keys[0], cfg.vocab, cfg.d_model),
+        act_dtype = jnp.dtype(getattr(cfg, "act_dtype", "bfloat16"))
+        params = {"embed": embed_init(keys[0], cfg.vocab, cfg.d_model,
+                                      dtype=act_dtype),
                   "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
                   "lm_head": dense_init(keys[1], cfg.d_model, cfg.vocab)}
         fam = cfg.family
@@ -197,7 +199,9 @@ class Model:
                 p, seed = ps
                 return layer_fn(x, p)
 
-            wrapped = compressed_block(f, comp)
+            offload = getattr(cfg, "act_offload", None)
+            wrapped = compressed_block(
+                f, comp, offload=None if offload == "device" else offload)
             return lambda x, p, seed: wrapped(x, (p, seed), seed)
         if cfg.act_mode == "remat":
             ck = jax.checkpoint(layer_fn)

@@ -1,0 +1,52 @@
+"""Stash arena: pooled compressed-activation storage with async host
+offload and backward prefetch.
+
+The compression stack shrinks the *bytes* of every saved-for-backward
+activation, but as long as each layer stashes its own scattered
+``CompressedTensor`` the device peak is set by XLA's allocator, not by the
+byte count the ledger reports.  This package turns the report into
+allocator-visible savings:
+
+* :mod:`repro.offload.arena` — a static **planner** that lays every
+  layer's ``packed``/``zero``/``rng``/``rp_seed`` fields (plus 1-bit ReLU
+  masks and raw f32 stashes of uncompressed layers) into one contiguous
+  uint32 arena + one f32 arena with static offsets (:class:`StashPlan`),
+  and ``stash_write``/``stash_read`` that round-trip bit-identically to
+  the per-tensor residuals.
+* :mod:`repro.offload.engine` — the **offload engine**: policies
+  ``{"device", "host", "pinned-paged"}`` that move arena segments
+  device→host after each layer's forward stash and prefetch them
+  host→device one layer ahead of the backward walk.  Platforms with a
+  host memory space (TPU/GPU) use memory-kind ``jax.device_put``;
+  everywhere else a synchronous pure-callback host store keeps the same
+  semantics (and the same bits).
+* :mod:`repro.offload.gnn` — the GNN integration: a whole-forward
+  ``custom_vjp`` that routes every layer's stash through the arena and
+  walks the backward pass layer-by-layer against the (possibly
+  host-resident) arena.
+
+Entry points: ``train_gnn(offload=...)`` / ``train_gnn_batched(offload=...)``,
+``Model`` with ``ArchConfig.act_offload`` (transformer scan path), and
+``launch.train --offload``.
+"""
+from repro.offload.arena import (StashPlan, arena_init, plan_stashes,
+                                 read_mask, read_raw, stash_read, stash_write,
+                                 write_mask, write_raw)
+from repro.offload.engine import (POLICIES, check_policy,
+                                  device_memory_stats,
+                                  device_resident_stash_bytes,
+                                  fetch_compressed, host_memory_kind,
+                                  host_store_bytes, make_reader, make_writer,
+                                  measure_live_bytes, offload_compressed)
+from repro.offload.gnn import arena_gnn_forward, plan_gnn_stashes
+
+__all__ = [
+    "StashPlan", "plan_stashes", "arena_init",
+    "stash_write", "stash_read", "write_raw", "read_raw",
+    "write_mask", "read_mask",
+    "POLICIES", "check_policy", "host_memory_kind", "make_writer",
+    "make_reader", "measure_live_bytes", "host_store_bytes",
+    "device_resident_stash_bytes", "device_memory_stats",
+    "offload_compressed", "fetch_compressed",
+    "arena_gnn_forward", "plan_gnn_stashes",
+]

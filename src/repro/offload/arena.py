@@ -1,0 +1,266 @@
+"""Arena planner: static layout of every layer's stash into pooled arenas.
+
+A :class:`StashPlan` is computed once per (model config × live node count)
+from *static* information only — per-layer :class:`CompressionConfig`
+(including heterogeneous autoprec widths), stash shapes, and ReLU-mask
+element counts.  It assigns every field a :class:`Segment` (arena +
+offset + size) in one contiguous ``uint32`` arena (packed code words,
+RP seeds, ReLU sign masks) and one ``float32`` arena (per-block
+zero/range pairs, plus raw f32 stashes of uncompressed layers).
+
+``stash_write`` / ``stash_read`` are bit-identical to the per-tensor
+residuals: a write copies the exact ``CompressedTensor`` fields into the
+arena slices, a read slices them back out and rebuilds the tensor, so
+``decompress(stash_read(stash_write(x)))`` equals
+``decompress(compress(x))`` word for word (see ``tests/test_offload.py``
+for the parity gate across mixed bits and ragged blocks).
+
+The plan is hashable (frozen dataclasses of tuples) so it can ride as a
+static argument of jitted steps and ``custom_vjp`` closures; it doubles
+as the byte *ledger* the memory report and the offload benchmarks read
+(:meth:`StashPlan.per_layer_rows`, :attr:`StashPlan.total_bytes`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import backend
+from repro.core import pack as packmod
+from repro.core.compressor import CompressedTensor, CompressionConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A contiguous span of one arena: ``arena ∈ {"u32", "f32"}``."""
+
+    arena: str
+    offset: int
+    size: int
+
+    @property
+    def nbytes(self) -> int:
+        return 4 * self.size  # both arenas hold 4-byte elements
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Static geometry + segments of one layer's stash.
+
+    Compressed layers carry ``packed``/``zero``/``rng``/``rp_seed``
+    segments; uncompressed layers a ``raw`` f32 segment; hidden layers
+    additionally a ``mask`` segment for the word-aligned 1-bit ReLU sign
+    mask (``mask_elems`` pre-pack elements).
+    """
+
+    index: int
+    cfg: CompressionConfig | None
+    shape: tuple[int, ...]        # pre-RP stash shape
+    proj_shape: tuple[int, ...]   # post-RP shape (== shape when no RP)
+    n_blocks: int
+    words_per_block: int
+    packed: Segment | None
+    zero: Segment | None
+    rng: Segment | None
+    rp_seed: Segment | None
+    raw: Segment | None
+    mask: Segment | None
+    mask_elems: int
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in (self.packed, self.zero, self.rng,
+                                      self.rp_seed, self.raw, self.mask)
+                   if s is not None)
+
+    @property
+    def n_reads(self) -> int:
+        """Backward-pass fetches this layer issues (stash + optional mask)."""
+        return 1 + (1 if self.mask is not None else 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class StashPlan:
+    layers: tuple[LayerPlan, ...]
+    u32_words: int
+    f32_elems: int
+    dtype: str = "float32"        # dtype the stashes decompress back to
+
+    # ------------------------------------------------------------ ledger
+    @property
+    def u32_bytes(self) -> int:
+        return 4 * self.u32_words
+
+    @property
+    def f32_bytes(self) -> int:
+        return 4 * self.f32_elems
+
+    @property
+    def total_bytes(self) -> int:
+        return self.u32_bytes + self.f32_bytes
+
+    @property
+    def max_layer_bytes(self) -> int:
+        return max((lp.nbytes for lp in self.layers), default=0)
+
+    @property
+    def n_reads(self) -> int:
+        return sum(lp.n_reads for lp in self.layers)
+
+    def per_layer_rows(self) -> list[dict]:
+        rows = []
+        for lp in self.layers:
+            row = {"layer": lp.index, "arena_bytes": lp.nbytes,
+                   "bits": None if lp.cfg is None else lp.cfg.bits}
+            if lp.mask is not None:
+                row["mask_bytes"] = lp.mask.nbytes
+            rows.append(row)
+        return rows
+
+
+def _stash_geometry(shape: tuple[int, ...], cfg: CompressionConfig):
+    """(proj_shape, n_blocks, words_per_block) — must mirror ``compress``:
+    optional RP on the last dim, then flatten + regroup into G-blocks."""
+    if cfg.rp_ratio > 1:
+        d = shape[-1]
+        assert d % cfg.rp_ratio == 0, \
+            f"last dim {d} not divisible by rp_ratio {cfg.rp_ratio}"
+        proj_shape = (*shape[:-1], d // cfg.rp_ratio)
+    else:
+        proj_shape = tuple(shape)
+    numel = 1
+    for s in proj_shape:
+        numel *= s
+    n_blocks = (numel + cfg.group_size - 1) // cfg.group_size
+    return proj_shape, n_blocks, packmod.packed_len(cfg.group_size, cfg.bits)
+
+
+def plan_stashes(shapes: tuple[tuple[int, ...], ...],
+                 cfgs: tuple[CompressionConfig | None, ...],
+                 mask_elems: tuple[int, ...] | None = None,
+                 dtype: str = "float32") -> StashPlan:
+    """Lay one stash per layer into the pooled arenas.
+
+    ``shapes[li]`` is the pre-RP shape of what layer li saves,
+    ``cfgs[li]`` its compression config (``None`` → stored raw f32), and
+    ``mask_elems[li]`` the element count of its 1-bit ReLU mask (0 = no
+    mask).  Offsets are assigned sequentially with no padding, so the
+    arena byte total equals the sum of the per-tensor residual bytes.
+    """
+    if mask_elems is None:
+        mask_elems = (0,) * len(shapes)
+    if not (len(shapes) == len(cfgs) == len(mask_elems)):
+        raise ValueError("shapes/cfgs/mask_elems length mismatch")
+    u_off, f_off = 0, 0
+    layers = []
+    for li, (shape, cfg, me) in enumerate(zip(shapes, cfgs, mask_elems)):
+        packed = zero = rng = rp_seed = raw = mask = None
+        if cfg is None:
+            numel = 1
+            for s in shape:
+                numel *= s
+            raw = Segment("f32", f_off, numel)
+            f_off += numel
+            proj_shape, n_blocks, wpb = tuple(shape), 0, 0
+        else:
+            proj_shape, n_blocks, wpb = _stash_geometry(shape, cfg)
+            packed = Segment("u32", u_off, n_blocks * wpb)
+            u_off += packed.size
+            rp_seed = Segment("u32", u_off, 1)
+            u_off += 1
+            zero = Segment("f32", f_off, n_blocks)
+            f_off += n_blocks
+            rng = Segment("f32", f_off, n_blocks)
+            f_off += n_blocks
+        if me:
+            mask = Segment("u32", u_off, packmod.packed_len(me, 1))
+            u_off += mask.size
+        layers.append(LayerPlan(
+            index=li, cfg=cfg, shape=tuple(shape), proj_shape=proj_shape,
+            n_blocks=n_blocks, words_per_block=wpb, packed=packed, zero=zero,
+            rng=rng, rp_seed=rp_seed, raw=raw, mask=mask, mask_elems=me))
+    return StashPlan(layers=tuple(layers), u32_words=u_off, f32_elems=f_off,
+                     dtype=dtype)
+
+
+# ---------------------------------------------------------------- arenas
+def arena_init(plan: StashPlan):
+    """Fresh zeroed (u32, f32) arena pair for one forward pass."""
+    return (jnp.zeros((plan.u32_words,), jnp.uint32),
+            jnp.zeros((plan.f32_elems,), jnp.float32))
+
+
+def _seg_set(arena, seg: Segment, values):
+    return arena.at[seg.offset:seg.offset + seg.size].set(
+        values.reshape(-1).astype(arena.dtype))
+
+
+def _seg_get(arena, seg: Segment):
+    return arena[seg.offset:seg.offset + seg.size]
+
+
+def stash_write(arenas, plan: StashPlan, li: int, ct: CompressedTensor):
+    """Copy a ``CompressedTensor``'s fields into layer li's segments."""
+    lp = plan.layers[li]
+    if lp.packed is None:
+        raise ValueError(f"layer {li} is planned raw; use write_raw")
+    u32, f32 = arenas
+    u32 = _seg_set(u32, lp.packed, ct.packed)
+    u32 = u32.at[lp.rp_seed.offset].set(ct.rp_seed.astype(jnp.uint32))
+    f32 = _seg_set(f32, lp.zero, ct.zero)
+    f32 = _seg_set(f32, lp.rng, ct.rng)
+    return (u32, f32)
+
+
+def stash_read(arenas, plan: StashPlan, li: int) -> CompressedTensor:
+    """Rebuild layer li's ``CompressedTensor`` from the arena slices.
+
+    The concrete kernel backend is re-routed from the layer's config
+    exactly as ``compress`` routed it (all impls write bit-identical
+    words, so a re-route under a changed override still decompresses to
+    the same values).
+    """
+    lp = plan.layers[li]
+    if lp.packed is None:
+        raise ValueError(f"layer {li} is planned raw; use read_raw")
+    u32, f32 = arenas
+    cfg = lp.cfg
+    impl = backend.route_quant(cfg.impl, cfg.bits, cfg.group_size,
+                               cfg.levels())
+    return CompressedTensor(
+        packed=_seg_get(u32, lp.packed).reshape(lp.n_blocks,
+                                                lp.words_per_block),
+        zero=_seg_get(f32, lp.zero),
+        rng=_seg_get(f32, lp.rng),
+        rp_seed=u32[lp.rp_seed.offset],
+        shape=lp.shape, dtype=jnp.dtype(plan.dtype), cfg=cfg, impl=impl)
+
+
+def write_raw(arenas, plan: StashPlan, li: int, x):
+    """Store an uncompressed layer's f32 stash in the f32 arena."""
+    lp = plan.layers[li]
+    if lp.raw is None:
+        raise ValueError(f"layer {li} is planned compressed; use stash_write")
+    u32, f32 = arenas
+    return (u32, _seg_set(f32, lp.raw, x))
+
+
+def read_raw(arenas, plan: StashPlan, li: int):
+    lp = plan.layers[li]
+    u32, f32 = arenas
+    return _seg_get(f32, lp.raw).reshape(lp.shape).astype(
+        jnp.dtype(plan.dtype))
+
+
+def write_mask(arenas, plan: StashPlan, li: int, mask_words):
+    """Store a layer's packed 1-bit ReLU sign mask ((1, n_words) uint32)."""
+    lp = plan.layers[li]
+    u32, f32 = arenas
+    return (_seg_set(u32, lp.mask, mask_words), f32)
+
+
+def read_mask(arenas, plan: StashPlan, li: int):
+    lp = plan.layers[li]
+    u32, f32 = arenas
+    return _seg_get(u32, lp.mask).reshape(1, lp.mask.size)

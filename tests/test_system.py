@@ -1,9 +1,11 @@
 """End-to-end behaviour: the full train launcher (data pipeline → model →
-ACT compression → optimizer → checkpoint/resume) on CPU."""
+ACT compression → optimizer → checkpoint/resume) and the serve launcher
+(incl. the stash-arena read side) on CPU."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.serve import main as serve_main
 from repro.launch.train import main as train_main
 
 
@@ -26,6 +28,21 @@ def test_train_launcher_resume(tmp_path):
                        "--ckpt-every", "3"])
     # resumed from step 6, ran only 3 more
     assert hist[0]["step"] == 6 and len(hist) == 3
+
+
+def test_serve_launcher_offload_smoke():
+    """``launch.serve --offload host`` exercises the arena read side on the
+    serving path: prompt embeddings are stashed compressed through the
+    offload engine and read back before decoding; outputs must still be
+    produced and the callback host store must drain."""
+    from repro.offload.engine import host_store_bytes
+
+    outs = serve_main(["--arch", "qwen1.5-4b", "--smoke",
+                       "--requests", "2", "--batch", "2",
+                       "--prompt-len", "8", "--gen-len", "4",
+                       "--offload", "host"])
+    assert len(outs) == 1 and outs[0].shape == (2, 4)
+    assert host_store_bytes() == 0
 
 
 def test_serve_loop_greedy_decode():
