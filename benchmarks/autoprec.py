@@ -24,6 +24,7 @@ import json
 import pathlib
 
 from repro.core import CompressionConfig, autoprec
+from repro.engine import ExecutionPlan, PrecisionPolicy, run as engine_run
 from repro.graph import (GNNConfig, activation_memory_report, arxiv_like,
                          collect_layer_stats, train_gnn)
 from repro.graph.models import graph_tuple
@@ -60,11 +61,16 @@ def run(scale: float = 0.01, epochs: int = 30, hidden=(64, 64),
     cfg_vm = GNNConfig(arch="sage", hidden=hidden, n_classes=g.num_classes,
                        compression=dataclasses.replace(fixed_comp, vm=True))
 
+    # allocated arms are explicit precision-policy plans; the fixed arm is
+    # the default plan (train_gnn's spelling of the same engine call)
+    refresh = max(epochs // 2, 1)
     r_fixed = train_gnn(g, cfg_fixed, n_epochs=epochs, seed=seed)
-    r_eq = train_gnn(g, cfg_vm, n_epochs=epochs, seed=seed, bit_budget=2.0,
-                     autoprec_refresh=max(epochs // 2, 1))
-    r_low = train_gnn(g, cfg_vm, n_epochs=epochs, seed=seed, bit_budget=1.5,
-                      autoprec_refresh=max(epochs // 2, 1))
+    r_eq = engine_run(g, cfg_vm, ExecutionPlan(precision=PrecisionPolicy(
+        kind="autoprec", bit_budget=2.0, refresh=refresh)),
+        n_epochs=epochs, seed=seed)
+    r_low = engine_run(g, cfg_vm, ExecutionPlan(precision=PrecisionPolicy(
+        kind="autoprec", bit_budget=1.5, refresh=refresh)),
+        n_epochs=epochs, seed=seed)
 
     # shared sensitivity basis: range moments at the fixed run's final params
     stats = collect_layer_stats(r_fixed["params"], graph_tuple(g), cfg_fixed)

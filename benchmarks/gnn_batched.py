@@ -2,11 +2,15 @@
 full-graph loop — epochs/sec and peak saved-activation bytes at equal
 compression config, swept over ``impl in {jnp, interp}``.
 
-Results land in ``BENCH_gnn_batched.json`` next to the repo root (same
-convention as ``BENCH_compressor.json``).  On CPU the throughput column
-measures interpreter overhead, not the paper's bandwidth effect; the
-hardware-independent claim this bench tracks is the *peak* byte model —
-one padded batch live at a time instead of the whole graph.
+Both arms are explicit :class:`~repro.engine.plan.ExecutionPlan` objects
+lowered by :func:`repro.engine.runner.run`, and the memory report reads
+the *same* plan the engine executed — one source of truth for the peak
+byte model.  Results land in ``BENCH_gnn_batched.json`` next to the repo
+root (same convention as ``BENCH_compressor.json``).  On CPU the
+throughput column measures interpreter overhead, not the paper's
+bandwidth effect; the hardware-independent claim this bench tracks is
+the *peak* byte model — one padded batch live at a time instead of the
+whole graph.
 """
 from __future__ import annotations
 
@@ -14,14 +18,15 @@ import json
 import pathlib
 
 from repro.core import CompressionConfig
+from repro.engine import ExecutionPlan, KernelPolicy, SamplingPolicy, run
 from repro.graph import (GNNConfig, activation_memory_report, arxiv_like,
-                         make_subgraph_batches, train_gnn, train_gnn_batched)
+                         make_subgraph_batches)
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_gnn_batched.json"
 
 
-def run(scale: float = 0.02, epochs: int = 20, n_parts: int = 4,
-        hidden=(64, 64), impls=("jnp", "interp"), interp_epochs: int = 4):
+def run_bench(scale: float = 0.02, epochs: int = 20, n_parts: int = 4,
+              hidden=(64, 64), impls=("jnp", "interp"), interp_epochs: int = 4):
     g = arxiv_like(scale=scale)
     comp = CompressionConfig(bits=2, group_size=256, rp_ratio=8)
     batches = make_subgraph_batches(g, n_parts, method="bfs", seed=0)
@@ -31,10 +36,13 @@ def run(scale: float = 0.02, epochs: int = 20, n_parts: int = 4,
         cfg = GNNConfig(arch="sage", hidden=hidden,
                         n_classes=g.num_classes, compression=comp)
         ep = interp_epochs if impl == "interp" else epochs
-        full = train_gnn(g, cfg, n_epochs=ep, seed=0, impl=impl)
-        bat = train_gnn_batched(g, cfg, n_parts, n_epochs=ep, seed=0,
-                                impl=impl, batches=batches)
-        rep = activation_memory_report(g, cfg, n_parts=n_parts,
+        full_plan = ExecutionPlan(kernel=KernelPolicy(impl=impl))
+        batch_plan = ExecutionPlan(
+            sampling=SamplingPolicy(kind="partition", n_parts=n_parts),
+            kernel=KernelPolicy(impl=impl))
+        full = run(g, cfg, full_plan, n_epochs=ep, seed=0)
+        bat = run(g, cfg, batch_plan, n_epochs=ep, seed=0, batches=batches)
+        rep = activation_memory_report(g, cfg, plan=batch_plan,
                                        batch_nodes=bat["batch_nodes"])
         data[impl] = {
             "epochs": ep,
@@ -52,8 +60,8 @@ def run(scale: float = 0.02, epochs: int = 20, n_parts: int = 4,
 
 
 def main(fast: bool = True):
-    data = run(scale=0.01 if fast else 0.02, epochs=10 if fast else 40,
-               interp_epochs=3 if fast else 8)
+    data = run_bench(scale=0.01 if fast else 0.02, epochs=10 if fast else 40,
+                     interp_epochs=3 if fast else 8)
     out = []
     for impl, d in data.items():
         if impl == "graph":

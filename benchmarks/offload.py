@@ -33,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CompressionConfig
-from repro.graph import GNNConfig, cora_like, train_gnn
+from repro.engine import ExecutionPlan, StashPolicy, run as engine_run
+from repro.graph import GNNConfig, cora_like
 from repro.graph.models import graph_tuple, init_gnn_params
 from repro.graph.train import _loss_fn, activation_memory_report
 from repro.offload import (device_resident_stash_bytes, host_store_bytes,
@@ -77,17 +78,20 @@ def run(scale: float = 0.3, epochs: int = 10):
     seed = jnp.uint32(7919)
 
     modes = {
-        "none": dict(plan=None, offload=None),
-        "arena": dict(plan=plan, offload="device"),
-        "arena_host": dict(plan=plan, offload="host"),
+        "none": dict(plan=None, offload=None, stash=StashPolicy()),
+        "arena": dict(plan=plan, offload="device",
+                      stash=StashPolicy(kind="arena", placement="device")),
+        "arena_host": dict(plan=plan, offload="host",
+                           stash=StashPolicy(kind="arena",
+                                             placement="host")),
     }
     results = {}
     for name, kw in modes.items():
         loss_fn = partial(_loss_fn, plan=kw["plan"], offload=kw["offload"])
         dev_bytes, host_bytes = _residual_bytes(
             loss_fn, params, gt, labels, mask, cfg, seed)
-        r = train_gnn(g, cfg, n_epochs=epochs, seed=0,
-                      offload=kw["offload"])
+        r = engine_run(g, cfg, ExecutionPlan(stash=kw["stash"]),
+                       n_epochs=epochs, seed=0)
         results[name] = {
             "measured_residual_bytes": int(dev_bytes),
             "host_store_bytes": int(host_bytes),
@@ -100,14 +104,19 @@ def run(scale: float = 0.3, epochs: int = 10):
         }
 
     # exact host-vs-device parity on the same smoke config
-    r_dev = train_gnn(g, cfg, n_epochs=3, seed=0, offload="device",
-                      verbose=True, eval_every=1)
-    r_host = train_gnn(g, cfg, n_epochs=3, seed=0, offload="host",
+    host_plan = ExecutionPlan(stash=StashPolicy(kind="arena",
+                                                placement="host"))
+    dev_plan = ExecutionPlan(stash=StashPolicy(kind="arena",
+                                               placement="device"))
+    r_dev = engine_run(g, cfg, dev_plan, n_epochs=3, seed=0,
                        verbose=True, eval_every=1)
+    r_host = engine_run(g, cfg, host_plan, n_epochs=3, seed=0,
+                        verbose=True, eval_every=1)
     traj_dev = [l for _, l, _ in r_dev["history"]]
     traj_host = [l for _, l, _ in r_host["history"]]
 
-    rep = activation_memory_report(g, cfg, offload="host")
+    # the report reads the exact plan object the host run executed
+    rep = activation_memory_report(g, cfg, plan=host_plan)
     out = {
         "dataset": {"name": g.name, "n_nodes": g.n_nodes,
                     "n_edges": g.n_edges},

@@ -1,0 +1,118 @@
+"""Bench-regression gate: diff fresh ``BENCH_gnn_batched.json`` /
+``BENCH_offload.json`` epoch-time and peak-bytes columns against the
+committed baselines and fail on >10% regression.
+
+  PYTHONPATH=src python scripts/bench_regression.py \\
+      --baseline-dir /tmp/bench-baseline [--threshold 0.10]
+
+CI copies the committed JSONs aside *before* the benchmark steps rewrite
+them in place, then runs this script against the copies.  Byte metrics
+are deterministic models (the engine's StashPlan / report ledger) and
+compare strictly; epoch-time metrics are wall-clock and inherit runner
+noise, so ``--time-threshold`` may be widened when a queue-shared runner
+proves jittery (the default honors the 10% contract).  Baselines are
+refreshed intentionally with ``scripts/refresh_experiments.py --bench``.
+
+Exit status: 0 when every metric holds, 1 with a per-metric report
+otherwise.  A metric missing from either side fails loudly — schema
+drift must be a conscious baseline refresh, not a silent skip.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+#: metric extractors: file -> {metric name: (getter, kind)} where kind is
+#: "time" (lower is better, noisy) or "bytes" (lower is better, exact model)
+def _gnn_batched_metrics(d: dict) -> dict:
+    out = {}
+    for impl, arm in d.items():
+        if impl == "graph":
+            continue
+        for mode in ("full", "batched"):
+            out[f"{impl}/{mode}/epoch_time_us"] = (
+                1e6 / max(arm[f"{mode}_epochs_per_sec"], 1e-9), "time")
+        out[f"{impl}/peak_saved_bytes"] = (arm["peak_saved_bytes"], "bytes")
+        out[f"{impl}/full_saved_bytes"] = (arm["full_saved_bytes"], "bytes")
+    return out
+
+
+def _offload_metrics(d: dict) -> dict:
+    out = {"plan/total_bytes": (d["plan"]["total_bytes"], "bytes")}
+    for name, m in d["modes"].items():
+        out[f"{name}/step_time_us"] = (m["step_time_us"], "time")
+        out[f"{name}/ledger_device_bytes"] = (m["ledger_device_bytes"],
+                                              "bytes")
+    return out
+
+
+EXTRACTORS = {
+    "BENCH_gnn_batched.json": _gnn_batched_metrics,
+    "BENCH_offload.json": _offload_metrics,
+}
+
+
+def compare(fresh_dir: Path, baseline_dir: Path, threshold: float,
+            time_threshold: float) -> list[str]:
+    failures = []
+    for fname, extract in EXTRACTORS.items():
+        fresh_p, base_p = fresh_dir / fname, baseline_dir / fname
+        if not base_p.exists():
+            failures.append(f"{fname}: no committed baseline at {base_p}")
+            continue
+        if not fresh_p.exists():
+            failures.append(f"{fname}: benchmark did not produce {fresh_p}")
+            continue
+        fresh = extract(json.loads(fresh_p.read_text()))
+        base = extract(json.loads(base_p.read_text()))
+        for key in sorted(set(fresh) | set(base)):
+            if key not in fresh or key not in base:
+                failures.append(f"{fname}:{key}: metric missing from "
+                                f"{'fresh' if key not in fresh else 'baseline'}"
+                                " run (schema drift needs a baseline refresh)")
+                continue
+            f_val, kind = fresh[key]
+            b_val, _ = base[key]
+            lim = time_threshold if kind == "time" else threshold
+            if b_val > 0 and f_val > b_val * (1.0 + lim):
+                failures.append(
+                    f"{fname}:{key}: {f_val:.1f} vs baseline {b_val:.1f} "
+                    f"(+{100 * (f_val / b_val - 1):.1f}% > {100 * lim:.0f}%)")
+            else:
+                rel = 0.0 if b_val == 0 else 100 * (f_val / b_val - 1)
+                print(f"ok  {fname}:{key}: {f_val:.1f} "
+                      f"({rel:+.1f}% vs baseline)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", type=Path, required=True,
+                    help="directory holding the committed BENCH_*.json "
+                         "(copied aside before the bench run rewrote them)")
+    ap.add_argument("--fresh-dir", type=Path, default=REPO,
+                    help="directory holding the freshly produced JSONs")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max allowed relative regression on byte metrics")
+    ap.add_argument("--time-threshold", type=float, default=None,
+                    help="max allowed relative regression on epoch-time "
+                         "metrics (defaults to --threshold)")
+    args = ap.parse_args(argv)
+    tt = args.time_threshold if args.time_threshold is not None \
+        else args.threshold
+    failures = compare(args.fresh_dir, args.baseline_dir, args.threshold, tt)
+    if failures:
+        print("\nBENCH REGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        return 1
+    print("\nall benchmark metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

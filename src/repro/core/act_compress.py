@@ -24,9 +24,10 @@ Where the residuals *live* is a separate axis: ``offload=`` on
 stash to host between forward and backward through
 :mod:`repro.offload.engine` (the residual becomes a tiny
 :class:`~repro.offload.engine.HostStash` ticket — scan-stackable, so the
-transformer layer loop carries words, not code arrays).  Pooled multi-layer
-storage — one contiguous arena for *all* layers' stashes — lives one level
-up in :mod:`repro.offload.arena` / :mod:`repro.offload.gnn`.
+transformer layer loop carries words, not code arrays).  Whole-network
+stash routing — per-tensor or pooled-arena storage for *all* of a GNN's
+layers behind one ``custom_vjp`` — lives one level up in
+:mod:`repro.engine.forward` (planned by :mod:`repro.offload.arena`).
 """
 from __future__ import annotations
 
@@ -58,9 +59,14 @@ def _maybe_fetch(res, offload):
     return engine.fetch_compressed(res)
 
 
-def _zero_ct(x):
-    """Cotangent for a non-differentiable (integer) input."""
+def zero_ct(x):
+    """Cotangent for a non-differentiable (integer) input — shared by every
+    stash-aware ``custom_vjp`` (the per-op primitives here and the engine's
+    whole-network forward, :mod:`repro.engine.forward`)."""
     return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
+
+
+_zero_ct = zero_ct  # pre-engine private spelling
 
 
 # ---------------------------------------------------------------- matmul

@@ -21,6 +21,10 @@ same bit-scaling curve, empirically weighted per layer.
 Everything here runs at configuration time in numpy/python — the output is
 a tuple of ints that becomes a per-layer ``CompressionConfig`` tuple on
 ``GNNConfig`` (see :meth:`repro.graph.models.GNNConfig.with_layer_bits`).
+The training-time lifecycle — budget freezing, the two-seed gradient
+probe, refresh cadence, and the plan-recompile hook — is owned by
+:class:`repro.engine.precision.AutoprecController` behind
+``PrecisionPolicy(kind="autoprec")``.
 
 The solver is a greedy marginal-gain ascent (start every layer at the
 cheapest width, repeatedly buy the upgrade with the best Δvariance/Δbyte

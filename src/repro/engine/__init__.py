@@ -1,0 +1,45 @@
+"""Plan → compile → execute: the unified GNN training engine.
+
+One :class:`ExecutionPlan` composes four orthogonal policies — sampling
+(full-graph | partitioned mini-batch), precision (fixed | autoprec
+budget with refresh), stash (per-tensor | arena, on device | host |
+pinned-paged), and kernel backend (jnp | interp | pallas | auto).  The
+compiler (:mod:`repro.engine.compile`) lowers any plan to ONE jitted
+epoch step built on the single stash-aware ``custom_vjp`` forward
+(:mod:`repro.engine.forward`), and :func:`repro.engine.runner.run` drives
+it.  ``train_gnn`` / ``train_gnn_batched`` are thin plan-building
+wrappers over this package.
+
+Import shape: :mod:`~repro.engine.plan` and :mod:`~repro.engine.seeds`
+are dependency-light and load eagerly (``graph.models`` pulls the seed
+scheme at import time); the compiler/runtime modules import the graph
+package and resolve lazily via PEP 562 so neither import order deadlocks.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.engine import seeds  # noqa: F401
+from repro.engine.plan import (ExecutionPlan, KernelPolicy,  # noqa: F401
+                               PrecisionPolicy, SamplingPolicy, StashPolicy)
+
+_LAZY = {
+    "run": "repro.engine.runner",
+    "compile_plan": "repro.engine.compile",
+    "engine_loss": "repro.engine.compile",
+    "masked_nll": "repro.engine.compile",
+    "stash_gnn_forward": "repro.engine.forward",
+    "arena_gnn_forward": "repro.engine.forward",
+    "plan_gnn_stashes": "repro.engine.forward",
+    "TENSOR_STASH": "repro.engine.forward",
+    "AutoprecController": "repro.engine.precision",
+}
+
+__all__ = ["ExecutionPlan", "SamplingPolicy", "PrecisionPolicy",
+           "StashPolicy", "KernelPolicy", "seeds", *_LAZY]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")

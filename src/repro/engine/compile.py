@@ -1,0 +1,239 @@
+"""Plan compiler: lower any :class:`ExecutionPlan` to ONE jitted epoch
+step.
+
+``compile_plan`` resolves the plan's sampling axis into a data layout
+(the full graph tuple, or stacked padded subgraph batches grouped into
+``(n_updates, grad_accum, dp, ...)``) and emits a single
+``jax.jit``-compiled epoch step built on the engine's one stash-aware
+``custom_vjp`` forward (:mod:`repro.engine.forward`).  The stash and
+kernel axes are baked into that forward; the precision axis re-enters
+through :meth:`CompiledPlan.recompile`, which swaps the step for a new
+width allocation without touching the data layout.
+
+Pre-engine, this logic lived as two divergent ``make_step`` /
+``make_epoch_step`` closures inside ``graph/train.py`` plus a third
+step assembly in the offload benchmarks — every policy knob re-plumbed
+by hand in each.  The lowerings here are the same computations (the
+parity gate in ``tests/test_engine.py`` holds them bit-identical), with
+one owner.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.engine import seeds
+from repro.engine.forward import plan_gnn_stashes, stash_gnn_forward
+from repro.engine.plan import ExecutionPlan
+from repro.graph.models import graph_tuple
+from repro.graph.sampling import (group_batches, make_subgraph_batches,
+                                  stack_batches)
+from repro.optim import adamw_update
+from repro.parallel.sharding import dp_size, graph_batch_pspecs, to_named
+
+
+def masked_nll(logits, labels, mask):
+    """Mean masked softmax cross-entropy — the loss every GNN training
+    path (engine lowerings and the legacy ``_loss_fn`` shim) shares."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1)
+
+
+def engine_loss(params, gt, labels, mask, cfg, seed, node_mask, stash_plan,
+                stash):
+    """Training loss over the engine's unified stash-aware forward."""
+    logits = stash_gnn_forward(params, gt, cfg, stash_plan, stash,
+                               seed=seed, node_mask=node_mask)
+    return masked_nll(logits, labels, mask)
+
+
+class _CompiledFull:
+    """Full-graph lowering: one optimizer update per epoch step."""
+
+    kind = "full"
+
+    def __init__(self, g, cfg, plan: ExecutionPlan, opt):
+        self.plan = plan
+        self.opt = opt
+        self.gt = graph_tuple(g)
+        self.labels = g.labels
+        self.tr_mask = g.train_mask.astype(jnp.float32)
+        self.in_dim = g.n_feats
+        self.n_nodes = g.n_nodes
+        self._rebuild(cfg)
+
+    def _rebuild(self, cfg):
+        self.cfg = cfg
+        self.stash_plan = plan_gnn_stashes(cfg, self.in_dim, self.n_nodes)
+        stash, splan, opt = self.plan.stash, self.stash_plan, self.opt
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def step(params, state, epoch, gt, labels, tr_mask):
+            sr = seeds.sr_seed(epoch)
+            loss, grads = jax.value_and_grad(engine_loss)(
+                params, gt, labels, tr_mask, cfg, sr, None, splan, stash)
+            params, state = adamw_update(grads, state, params, opt)
+            return params, state, loss
+
+        self.step = step
+
+    def recompile(self, cfg) -> "_CompiledFull":
+        """Plan-recompile hook (autoprec refresh): new widths, same data."""
+        self._rebuild(cfg)
+        return self
+
+    def epoch_data(self, order_rng):
+        return (self.gt, self.labels, self.tr_mask)
+
+    def calibration(self):
+        """(gt, labels, mask, node_mask) the autoprec probe runs on."""
+        return (self.gt, self.labels, self.tr_mask, None)
+
+    def result_extras(self) -> dict:
+        return {}
+
+
+class _CompiledPartition:
+    """Partition-sampled lowering: one jitted ``lax.scan`` epoch over
+    grouped padded subgraph batches (grad accumulation inside, optional
+    data-parallel batch sharding over a device mesh)."""
+
+    kind = "partition"
+
+    def __init__(self, g, cfg, plan: ExecutionPlan, opt, batches, mesh,
+                 seed: int):
+        sp = plan.sampling
+        if batches is None:
+            batches = make_subgraph_batches(
+                g, sp.n_parts, method=sp.method, halo=sp.halo, seed=seed,
+                node_multiple=sp.node_multiple,
+                edge_multiple=sp.edge_multiple,
+                renormalize=sp.renormalize)
+        elif len(batches) != sp.n_parts:
+            raise ValueError(f"prebuilt batches list has {len(batches)} "
+                             f"entries but n_parts={sp.n_parts}")
+        self.plan = plan
+        self.opt = opt
+        self.batches = batches
+        self.n_batches = len(batches)
+        self.dp = dp_size(mesh) if mesh is not None else 1
+        if plan.stash.offload in ("host", "pinned-paged") and self.dp > 1:
+            raise ValueError(
+                f"offload={plan.stash.offload!r} needs an unsharded run "
+                f"(dp_size==1); got dp={self.dp}")
+        self.grad_accum = sp.grad_accum
+        group = self.dp * self.grad_accum
+        if self.n_batches % group:
+            raise ValueError(
+                f"n_parts={self.n_batches} must be a multiple of "
+                f"dp*grad_accum={self.dp}*{self.grad_accum}={group} "
+                f"(whole update groups per epoch)")
+        self.group = group
+        self.n_updates = self.n_batches // group
+        self.mesh = mesh
+        self.in_dim = g.n_feats
+        self.stacked = stack_batches(batches)
+        self.reshuffle = sp.shuffle and self.n_batches > 1
+        self._static_grouped = None
+        self._rebuild(cfg)
+
+    def _rebuild(self, cfg):
+        self.cfg = cfg
+        self.stash_plan = plan_gnn_stashes(cfg, self.in_dim,
+                                           self.batches[0].n_nodes)
+        stash, splan, opt = self.plan.stash, self.stash_plan, self.opt
+        n_batches, group, dp = self.n_batches, self.group, self.dp
+        grad_accum, n_updates = self.grad_accum, self.n_updates
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def epoch_step(params, state, epoch, grouped):
+            # grouped leaves: (n_updates, grad_accum, dp, ...)
+            def update(carry, inp):
+                params, state = carry
+                u, grp = inp
+
+                def micro(gsum, inp2):
+                    a, mb = inp2
+                    ords = seeds.batch_ordinals(epoch, n_batches, u, group,
+                                                a, dp)
+                    srs = seeds.sr_seed(ords)
+
+                    def group_loss(p):
+                        losses = jax.vmap(
+                            lambda b, s: engine_loss(p, b.graph_tuple(),
+                                                     b.labels, b.train_mask,
+                                                     cfg, s, b.node_mask,
+                                                     splan, stash)
+                        )(mb, srs)
+                        return losses.mean()
+
+                    loss, grads = jax.value_and_grad(group_loss)(params)
+                    return jax.tree.map(jnp.add, gsum, grads), loss
+
+                zeros = jax.tree.map(jnp.zeros_like, params)
+                gsum, losses = jax.lax.scan(
+                    micro, zeros, (jnp.arange(grad_accum), grp))
+                grads = jax.tree.map(lambda x: x / grad_accum, gsum)
+                params, state = adamw_update(grads, state, params, opt)
+                return (params, state), losses.mean()
+
+            (params, state), losses = jax.lax.scan(
+                update, (params, state), (jnp.arange(n_updates), grouped))
+            return params, state, losses.mean()
+
+        self.step = epoch_step
+
+    def recompile(self, cfg) -> "_CompiledPartition":
+        self._rebuild(cfg)
+        return self
+
+    def _make_grouped(self, order):
+        grouped = group_batches(self.stacked, order, self.n_updates,
+                                self.grad_accum, self.dp)
+        if self.mesh is not None:
+            specs = graph_batch_pspecs(grouped, self.mesh, axis=2)
+            grouped = jax.device_put(grouped, to_named(specs, self.mesh))
+        return grouped
+
+    def epoch_data(self, order_rng):
+        if not self.reshuffle:
+            if self._static_grouped is None:
+                self._static_grouped = self._make_grouped(
+                    np.arange(self.n_batches))
+            return (self._static_grouped,)
+        return (self._make_grouped(order_rng.permutation(self.n_batches)),)
+
+    def calibration(self):
+        # one padded batch — the engine's live stash unit — so the probe
+        # never re-materializes the full-graph activations this engine
+        # exists to avoid (the budget is therefore per batch, matching
+        # the actual peak)
+        b0 = self.batches[0]
+        return (b0.graph_tuple(), b0.labels, b0.train_mask, b0.node_mask)
+
+    def result_extras(self) -> dict:
+        return {"n_parts": self.n_batches,
+                "updates_per_epoch": self.n_updates,
+                "batch_nodes": self.batches[0].n_nodes,
+                "batch_edges": self.batches[0].n_edges}
+
+
+def compile_plan(g, cfg, plan: ExecutionPlan, opt, *, batches=None,
+                 mesh=None, seed: int = 0):
+    """Lower ``plan`` for graph ``g``: returns a compiled object exposing
+    ``step`` (the ONE jitted epoch step), ``epoch_data``, ``recompile``
+    (the autoprec refresh hook), ``calibration``, and ``result_extras``.
+
+    ``batches`` (prebuilt ``SubgraphBatch`` list) and ``mesh`` are runtime
+    resources, not plan policy — benchmarks/tests reuse one sampling pass
+    across plans, and the mesh is whatever hardware the process owns.
+    """
+    if plan.sampling.kind == "full":
+        if batches is not None:
+            raise ValueError("prebuilt batches need partition sampling")
+        return _CompiledFull(g, cfg, plan, opt)
+    return _CompiledPartition(g, cfg, plan, opt, batches, mesh, seed)

@@ -1,0 +1,171 @@
+"""THE stash-aware GNN forward: one ``custom_vjp`` over the whole network
+for every training path.
+
+Every combination of the engine's stash axis routes through this single
+implementation — classic per-tensor residuals (``StashPolicy(kind=
+"tensor")``), pooled device arenas, and host-offloaded arenas — by
+swapping the writer/reader pair from :mod:`repro.offload.engine`.  Before
+the engine refactor this forward existed twice: implicitly, as the
+composition of the per-op ``compressed_matmul`` / ``relu_1bit``
+``custom_vjp``s autodiff stitched together inside ``graph/train.py``'s
+two step builders, and explicitly as the arena-routed whole-net
+``custom_vjp`` in ``offload/gnn.py``.  Both spellings produce
+bit-identical gradients (the manual walk below *is* what autodiff
+emitted), so they collapsed into this one.
+
+Forward: exactly :func:`repro.graph.models.gnn_forward` — same layer
+math, same per-layer seeds (:func:`repro.engine.seeds.layer_seed`), same
+padding-mask pinning — except every layer's stash (compressed linear
+input, or raw f32 for uncompressed layers, plus the packed 1-bit ReLU
+sign mask) goes through the policy's writer.
+
+Backward: a manual layer-by-layer reverse walk mirroring what autodiff
+produces on the per-op path — ``dx = g @ wᵀ`` exact, ``dw = x̂ᵀ g`` at
+the reconstruction (EXACT's estimator), ReLU via the saved sign mask,
+and the Â-product transposed by swapping the edge list's src/dst roles.
+Arena readers prefetch layer ``li-1``'s segments before layer ``li``'s
+gradient math so host→device copies run one layer ahead
+(double-buffered); the per-tensor reader's prefetch is a no-op.
+
+Cotangents are returned for params and features; edge weights and the
+padding mask are non-differentiable graph constants (zero cotangents) —
+the training engines only ever differentiate with respect to params.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack as packmod
+from repro.core.act_compress import zero_ct
+from repro.core.compressor import compress, decompress
+from repro.engine import seeds
+from repro.engine.plan import StashPolicy
+from repro.offload import engine as stash_engine
+from repro.offload.arena import StashPlan
+from repro.offload.gnn import plan_gnn_stashes  # noqa: F401  (re-export)
+
+#: The per-tensor policy every plain (non-offload) training path uses.
+TENSOR_STASH = StashPolicy(kind="tensor", placement="device")
+
+
+@functools.lru_cache(maxsize=None)
+def _build(cfg, plan: StashPlan, stash: StashPolicy):
+    """The custom_vjp forward for one (GNNConfig, StashPlan, StashPolicy)."""
+    # deferred import: graph.models lazily dispatches into this module;
+    # sharing models' spmm keeps the Â-product — and hence the bit-parity
+    # contract — single-sourced
+    from repro.graph.models import spmm as _spmm
+
+    from repro.graph.models import gnn_forward
+
+    per_layer = cfg.layer_compression()
+    sage = cfg.arch == "sage"
+    L = len(plan.layers)
+
+    def layer_input(h, src, dst, mean_w, n):
+        if not sage:
+            return h
+        return jnp.concatenate([h, _spmm(h, src, dst, mean_w, n)], axis=1)
+
+    @jax.custom_vjp
+    def f(params, feats, src, dst, gcn_w, mean_w, seed, nm):
+        # primal path (un-differentiated calls): the per-op forward is
+        # value-identical and stash-free (compressed_matmul / relu_1bit
+        # primals are plain x @ w / maximum), so don't re-state the layer
+        # math a third time
+        return gnn_forward(params, (feats, src, dst, gcn_w, mean_w), cfg,
+                           seed=seed, node_mask=nm)
+
+    def f_fwd(params, feats, src, dst, gcn_w, mean_w, seed, nm):
+        n = feats.shape[0]
+        writer = stash_engine.make_writer(plan, stash.placement, seed,
+                                          kind=stash.kind)
+        h = feats * nm[:, None]
+        for li, p in enumerate(params):
+            lseed = seeds.layer_seed(seed, li)
+            x = layer_input(h, src, dst, mean_w, n)
+            comp = per_layer[li]
+            if comp is None:
+                writer.put_raw(li, x)
+            else:
+                writer.put_ct(li, compress(x, comp, lseed))
+            z = x @ p["w"] + p["b"]
+            if not sage:
+                z = _spmm(z, src, dst, gcn_w, n)
+            if li < L - 1:
+                writer.put_mask(li, packmod.pack(
+                    (z > 0).astype(jnp.int32).reshape(1, -1), 1))
+                z = jnp.maximum(z, 0.0)
+            h = z * nm[:, None]
+        return h, (params, src, dst, gcn_w, mean_w, nm, writer.residual())
+
+    def f_bwd(res, gy):
+        params, src, dst, gcn_w, mean_w, nm, residual = res
+        n = nm.shape[0]
+        reader = stash_engine.make_reader(plan, stash.placement, residual,
+                                          kind=stash.kind)
+        reader.prefetch(L - 1)
+        gh = gy
+        dparams = [None] * L
+        for li in reversed(range(L)):
+            if li > 0:
+                reader.prefetch(li - 1)  # one layer ahead of the compute
+            p = params[li]
+            lp = plan.layers[li]
+            g = gh * nm[:, None]
+            if li < L - 1:
+                m = packmod.unpack(reader.get_mask(li), 1, lp.mask_elems)
+                g = g * m.reshape(g.shape).astype(g.dtype)
+            # transpose of the output-side Â product (gcn applies it
+            # after the linear): swap the edge list's src/dst roles
+            gz = g if sage else _spmm(g, dst, src, gcn_w, n)
+            x_hat = (reader.get_raw(li) if lp.cfg is None
+                     else decompress(reader.get_ct(li)))
+            x2 = x_hat.reshape(-1, x_hat.shape[-1])
+            g2 = gz.reshape(-1, gz.shape[-1])
+            dparams[li] = {"w": (x2.T @ g2).astype(p["w"].dtype),
+                           "b": jnp.sum(gz, axis=0).astype(p["b"].dtype)}
+            gx = (gz @ p["w"].T).astype(x_hat.dtype)
+            if sage:
+                d = gx.shape[1] // 2
+                gh = gx[:, :d] + _spmm(gx[:, d:], dst, src, mean_w, n)
+            else:
+                gh = gx
+        dfeats = gh * nm[:, None]
+        return (dparams, dfeats, zero_ct(src), zero_ct(dst),
+                jnp.zeros_like(gcn_w), jnp.zeros_like(mean_w),
+                np.zeros((), jax.dtypes.float0), jnp.zeros_like(nm))
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def stash_gnn_forward(params, graph, cfg, plan: StashPlan,
+                      stash: StashPolicy = TENSOR_STASH, seed=0,
+                      node_mask=None):
+    """The engine's forward: ``gnn_forward`` values with the layer stashes
+    routed through ``stash``'s writer (per-tensor or pooled arena)."""
+    if len(plan.layers) != cfg.n_layers:
+        raise ValueError(f"plan has {len(plan.layers)} layers for a "
+                         f"{cfg.n_layers}-layer model")
+    feats, src, dst, gcn_w, mean_w = graph
+    nm = (jnp.ones((feats.shape[0],), feats.dtype) if node_mask is None
+          else node_mask.astype(feats.dtype))
+    fn = _build(cfg, plan, stash)
+    return fn(params, feats, src, dst, gcn_w, mean_w,
+              jnp.asarray(seed, jnp.uint32), nm)
+
+
+def arena_gnn_forward(params, graph, cfg, plan: StashPlan, seed=0,
+                      node_mask=None, policy: str = "device"):
+    """Drop-in for :func:`repro.graph.models.gnn_forward` with the stash
+    pooled into an arena under the given offload policy (the legacy
+    arena-only spelling of :func:`stash_gnn_forward`)."""
+    stash_engine.check_policy(policy)
+    return stash_gnn_forward(params, graph, cfg, plan,
+                             StashPolicy(kind="arena", placement=policy),
+                             seed=seed, node_mask=node_mask)

@@ -1,0 +1,197 @@
+"""ExecutionPlan: the declarative contract between every GNN training
+entry point and the engine compiler.
+
+A plan composes four **orthogonal** policies:
+
+* :class:`SamplingPolicy` — what is live at once: the full graph, or
+  padded partition-sampled subgraph batches (Cluster-GCN flavor) with
+  their bucketing / halo / shuffle / grad-accum knobs;
+* :class:`PrecisionPolicy` — fixed per-layer widths (whatever the
+  ``GNNConfig`` carries), or a variance-guided autoprec byte budget with
+  an optional refresh cadence (a refresh that changes the allocation
+  triggers a plan recompile, not a bespoke step rebuild);
+* :class:`StashPolicy` — how saved-for-backward state is stored:
+  scattered per-tensor pytree residuals, or one pooled arena, placed on
+  device / host / pinned-paged host memory;
+* :class:`KernelPolicy` — which kernel backend the compression stack
+  runs on (``jnp | interp | pallas | auto``, see
+  :mod:`repro.core.backend`).
+
+``train_gnn`` / ``train_gnn_batched`` are thin wrappers that build a plan
+with :meth:`ExecutionPlan.from_legacy` and hand it to
+:func:`repro.engine.runner.run`; ``launch.train``, the benchmarks, and
+``activation_memory_report`` construct plans directly so the memory/bit
+accounting reads the exact object training executed.
+
+Plans are frozen, hashable dataclasses: they ride as static arguments of
+jitted steps and key the compiler's forward cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.backend import VALID_IMPLS
+from repro.offload.engine import POLICIES as STASH_PLACEMENTS
+
+SAMPLING_KINDS = ("full", "partition")
+PRECISION_KINDS = ("fixed", "autoprec")
+STASH_KINDS = ("tensor", "arena")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingPolicy:
+    """Full-graph, or partition-sampled padded mini-batches."""
+
+    kind: str = "full"            # "full" | "partition"
+    n_parts: int = 1
+    method: str = "bfs"           # "bfs" | "random"
+    halo: int = 0
+    node_multiple: int = 64
+    edge_multiple: int = 256
+    renormalize: bool = False
+    shuffle: bool = True
+    grad_accum: int = 1
+
+    def __post_init__(self):
+        if self.kind not in SAMPLING_KINDS:
+            raise ValueError(f"sampling kind {self.kind!r} not in "
+                             f"{SAMPLING_KINDS}")
+        if self.n_parts < 1:
+            raise ValueError(f"n_parts={self.n_parts} must be >= 1")
+        if self.grad_accum < 1:
+            raise ValueError(f"grad_accum={self.grad_accum} must be >= 1")
+        if self.kind == "full" and self.n_parts != 1:
+            raise ValueError("full-graph sampling is incompatible with "
+                             f"n_parts={self.n_parts}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Fixed widths from the ``GNNConfig``, or an autoprec byte budget.
+
+    ``bit_budget`` is the average stash bits per element (2.0 = the fixed
+    INT2 footprint); ``refresh=k`` re-collects sensitivity stats and
+    re-solves every k epochs (0 = allocate once).  A refresh that changes
+    the allocation recompiles the plan's epoch step.
+    """
+
+    kind: str = "fixed"           # "fixed" | "autoprec"
+    bit_budget: float | None = None
+    refresh: int = 0
+
+    def __post_init__(self):
+        if self.kind not in PRECISION_KINDS:
+            raise ValueError(f"precision kind {self.kind!r} not in "
+                             f"{PRECISION_KINDS}")
+        if self.kind == "autoprec" and self.bit_budget is None:
+            raise ValueError("autoprec precision needs a bit_budget")
+        if self.kind == "fixed" and self.bit_budget is not None:
+            raise ValueError("fixed precision does not take a bit_budget "
+                             "(use kind='autoprec')")
+
+
+@dataclasses.dataclass(frozen=True)
+class StashPolicy:
+    """Where saved-for-backward stashes live.
+
+    kind "tensor"   — classic per-tensor pytree residuals (placement must
+                      be "device"; there is nothing pooled to move);
+    kind "arena"    — one pooled u32+f32 arena pair per forward
+                      (:mod:`repro.offload.arena`), placed per
+                      ``placement`` ∈ {"device", "host", "pinned-paged"}.
+    """
+
+    kind: str = "tensor"          # "tensor" | "arena"
+    placement: str = "device"     # "device" | "host" | "pinned-paged"
+
+    def __post_init__(self):
+        if self.kind not in STASH_KINDS:
+            raise ValueError(f"stash kind {self.kind!r} not in {STASH_KINDS}")
+        if self.placement not in STASH_PLACEMENTS:
+            raise ValueError(f"offload={self.placement!r} not in "
+                             f"{STASH_PLACEMENTS}")
+        if self.kind == "tensor" and self.placement != "device":
+            raise ValueError("per-tensor stashes are device-resident; "
+                             f"placement={self.placement!r} needs "
+                             "kind='arena'")
+
+    @property
+    def offload(self) -> str | None:
+        """The legacy ``offload=`` kwarg this policy corresponds to."""
+        return None if self.kind == "tensor" else self.placement
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Kernel backend override for the compression stack (None = keep
+    whatever each layer's ``CompressionConfig.impl`` already says)."""
+
+    impl: str | None = None
+
+    def __post_init__(self):
+        if self.impl is not None and self.impl not in VALID_IMPLS:
+            raise ValueError(f"impl={self.impl!r} not in {VALID_IMPLS}")
+
+    def apply(self, cfg):
+        """Reroute a GNNConfig's compression stack onto this backend."""
+        return cfg if self.impl is None else cfg.with_impl(self.impl)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    sampling: SamplingPolicy = SamplingPolicy()
+    precision: PrecisionPolicy = PrecisionPolicy()
+    stash: StashPolicy = StashPolicy()
+    kernel: KernelPolicy = KernelPolicy()
+
+    @classmethod
+    def from_legacy(cls, *, n_parts: int | None = None,
+                    impl: str | None = None, offload: str | None = None,
+                    bit_budget: float | None = None,
+                    autoprec_refresh: int = 0, method: str = "bfs",
+                    halo: int = 0, node_multiple: int = 64,
+                    edge_multiple: int = 256, renormalize: bool = False,
+                    shuffle: bool = True,
+                    grad_accum: int = 1) -> "ExecutionPlan":
+        """Build the plan a pre-engine kwarg spelling means.
+
+        ``n_parts=None`` is the full-graph loop; any integer (1 included)
+        is the partition-sampled engine.  ``offload=None`` keeps classic
+        per-tensor residuals; a policy string pools them into an arena at
+        that placement.
+        """
+        if n_parts is None:
+            sampling = SamplingPolicy()
+        else:
+            sampling = SamplingPolicy(
+                kind="partition", n_parts=n_parts, method=method, halo=halo,
+                node_multiple=node_multiple, edge_multiple=edge_multiple,
+                renormalize=renormalize, shuffle=shuffle,
+                grad_accum=grad_accum)
+        if bit_budget is None:
+            precision = PrecisionPolicy()
+        else:
+            precision = PrecisionPolicy(kind="autoprec",
+                                        bit_budget=float(bit_budget),
+                                        refresh=int(autoprec_refresh))
+        stash = (StashPolicy() if offload is None
+                 else StashPolicy(kind="arena", placement=offload))
+        return cls(sampling=sampling, precision=precision, stash=stash,
+                   kernel=KernelPolicy(impl=impl))
+
+    @property
+    def offload(self) -> str | None:
+        """Legacy ``offload=`` view of the stash policy (for reports)."""
+        return self.stash.offload
+
+    def describe(self) -> str:
+        """One-line human summary (launcher / benchmark logs)."""
+        s = self.sampling
+        samp = ("full-graph" if s.kind == "full"
+                else f"partition x{s.n_parts} ({s.method}, halo={s.halo})")
+        prec = ("fixed" if self.precision.kind == "fixed"
+                else f"autoprec {self.precision.bit_budget} bits/elt "
+                     f"(refresh {self.precision.refresh})")
+        stash = (f"{self.stash.kind}@{self.stash.placement}")
+        return (f"sampling={samp} | precision={prec} | stash={stash} | "
+                f"kernel={self.kernel.impl or 'cfg'}")

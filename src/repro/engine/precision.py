@@ -1,0 +1,109 @@
+"""Autoprec as a plan policy: the variance-guided bit-allocation
+lifecycle behind ``PrecisionPolicy(kind="autoprec")``.
+
+Owns the budget (frozen on the first allocation so refreshes re-split
+the *same* byte ceiling), the current per-layer widths, and the refresh
+cadence.  The engine's run loop asks :meth:`AutoprecController.due` each
+epoch and, when an :meth:`allocate` changes the widths, recompiles the
+plan's epoch step — the refresh is a plan-recompile hook, not a bespoke
+step rebuild (pre-engine, both training loops re-implemented this
+make_step dance by hand).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autoprec
+from repro.engine import seeds
+
+
+def _probe_loss(params, graph, labels, mask, cfg, seed, node_mask=None):
+    """The calibration loss: the plain per-op forward (no stash routing —
+    probing under a host-offload policy must not pay offload overhead;
+    every stash policy produces bit-identical gradients anyway)."""
+    # lazy: engine.compile imports the graph package
+    from repro.engine.compile import masked_nll
+    from repro.graph.models import gnn_forward
+
+    logits = gnn_forward(params, graph, cfg, seed=seed, node_mask=node_mask)
+    return masked_nll(logits, labels, mask)
+
+
+class AutoprecController:
+    """Variance-guided bit-allocation lifecycle shared by every plan.
+
+    ``allocate`` runs the cheap stats pass on the calibration graph it
+    was given — the full graph for full-graph sampling, a single padded
+    subgraph batch for the partition engine (so the probe never
+    re-materializes the full-graph activations the batched engine exists
+    to avoid; per-layer moments and noise ratios are scale-invariant) —
+    and calibrates each layer's ``grad_sens`` with a two-seed gradient
+    probe: ``dx`` and the ReLU mask are SR-noise-free, so
+    ``dw_l(s₁) − dw_l(s₂)`` isolates exactly the dequantization noise
+    layer l's stash injects.
+    """
+
+    def __init__(self, gt, labels, tr_mask, cfg, bit_budget: float,
+                 refresh: int, seed: int, node_mask=None):
+        self.templates = cfg.layer_compression()
+        if all(c is None for c in self.templates):
+            raise ValueError(
+                "bit_budget= needs a GNNConfig with compression configured")
+        self.base_cfg = cfg
+        self.bit_budget = float(bit_budget)
+        self.refresh = int(refresh)
+        self.gt = gt
+        self.labels = labels
+        self.tr_mask = tr_mask
+        self.node_mask = node_mask
+        self.seed = seed
+        self.budget_bytes = None
+        self.bits: tuple[int, ...] | None = None
+        self._grad_fn = jax.jit(jax.grad(_probe_loss), static_argnums=(4,))
+
+    def _probe_grad_sens(self, params, stats):
+        """Realized per-layer dw SR noise at template widths, divided by the
+        bit-scaling curve — so any candidate width re-prices as
+        ``grad_sens * normalized_sr_variance(candidate)``."""
+        s1, s2 = seeds.probe_seeds(self.seed)
+        g1 = self._grad_fn(params, self.gt, self.labels, self.tr_mask,
+                           self.base_cfg, s1, self.node_mask)
+        g2 = self._grad_fn(params, self.gt, self.labels, self.tr_mask,
+                           self.base_cfg, s2, self.node_mask)
+        out = []
+        for st, tmpl, p1, p2 in zip(stats, self.templates, g1, g2):
+            if st is None or tmpl is None:
+                out.append(st)
+                continue
+            noise = float(0.5 * jnp.sum((p1["w"] - p2["w"]) ** 2))
+            sens = noise / max(autoprec.normalized_sr_variance(tmpl), 1e-30)
+            # a zero probe (e.g. untrained head with zero grads) keeps the
+            # range-moment fallback rather than marking the layer free
+            out.append(dataclasses.replace(st, grad_sens=sens or None))
+        return out
+
+    def allocate(self, params):
+        """(re)solve the allocation; returns (cfg, changed)."""
+        from repro.graph.analysis import collect_layer_stats
+
+        stats = collect_layer_stats(params, self.gt, self.base_cfg,
+                                    seed=self.seed)
+        if self.budget_bytes is None:
+            self.budget_bytes = autoprec.budget_bytes_for(
+                stats, self.templates, self.bit_budget)
+        stats = self._probe_grad_sens(params, stats)
+        bits = autoprec.allocate_bits(stats, self.templates,
+                                      self.budget_bytes)
+        changed = bits != self.bits
+        self.bits = bits
+        return self.base_cfg.with_layer_bits(bits), changed
+
+    def due(self, epoch: int) -> bool:
+        return self.refresh > 0 and epoch > 0 and epoch % self.refresh == 0
+
+    def extras(self) -> dict:
+        return {"bits_per_layer": list(self.bits),
+                "bit_budget_bytes": self.budget_bytes}

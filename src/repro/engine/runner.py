@@ -1,0 +1,96 @@
+"""The engine's epoch driver: ``run(g, cfg, plan)`` is the single entry
+point behind ``train_gnn``, ``train_gnn_batched``, ``launch.train
+--graph-batches``, and the GNN benchmarks.
+
+The loop is policy-free by construction: it asks the compiled plan for
+its epoch data, calls the ONE jitted step, and services the autoprec
+refresh as a plan-recompile hook.  Everything policy-shaped lives in the
+plan and its compiler.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import seeds
+from repro.engine.compile import compile_plan
+from repro.engine.plan import ExecutionPlan
+from repro.engine.precision import AutoprecController
+from repro.graph.models import gnn_forward, graph_tuple, init_gnn_params
+from repro.optim import AdamWConfig, adamw_init
+
+
+def _accuracy(params, graph, labels, mask, cfg):
+    logits = gnn_forward(params, graph, cfg, seed=0)
+    correct = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+    return jnp.sum(correct * mask) / jnp.maximum(mask.sum(), 1)
+
+
+def _result(eval_fn, params, g, gt, history, n_epochs, dt, **extra):
+    """Final full-graph val/test metrics + the shared engine result dict
+    (every plan reports through this one contract)."""
+    val = float(eval_fn(params, gt, g.labels, g.val_mask.astype(jnp.float32)))
+    test = float(eval_fn(params, gt, g.labels,
+                         g.test_mask.astype(jnp.float32)))
+    return {"test_acc": test, "val_acc": val, "history": history,
+            "epochs_per_sec": n_epochs / dt, "params": params, **extra}
+
+
+def run(g, cfg, plan: ExecutionPlan | None = None, opt=None, *,
+        n_epochs: int = 100, seed: int = 0, eval_every: int = 10,
+        verbose: bool = False, batches=None, mesh=None) -> dict:
+    """Train ``cfg`` on ``g`` under ``plan``; returns the engine result
+    dict (``test_acc``, ``val_acc``, ``history``, ``epochs_per_sec``,
+    ``params``, ``cfg``, ``plan``, plus the partition extras
+    ``n_parts`` / ``updates_per_epoch`` / ``batch_nodes`` /
+    ``batch_edges`` and the autoprec extras ``bits_per_layer`` /
+    ``bit_budget_bytes`` when those policies are active).
+
+    ``batches`` / ``mesh`` are runtime resources for partition plans
+    (prebuilt sampling pass, device mesh) — see
+    :func:`repro.engine.compile.compile_plan`.
+    """
+    plan = plan if plan is not None else ExecutionPlan()
+    opt = opt or AdamWConfig(lr=5e-3, weight_decay=0.0)
+    cfg = plan.kernel.apply(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = init_gnn_params(key, cfg, g.n_feats)
+    state = adamw_init(params, opt)
+    compiled = compile_plan(g, cfg, plan, opt, batches=batches, mesh=mesh,
+                            seed=seed)
+    ctrl = None
+    if plan.precision.kind == "autoprec":
+        cal_gt, cal_labels, cal_mask, cal_nm = compiled.calibration()
+        ctrl = AutoprecController(cal_gt, cal_labels, cal_mask, cfg,
+                                  plan.precision.bit_budget,
+                                  plan.precision.refresh, seed,
+                                  node_mask=cal_nm)
+        cfg, _ = ctrl.allocate(params)
+        compiled = compiled.recompile(cfg)
+    eval_fn = jax.jit(partial(_accuracy, cfg=cfg))
+    gt = graph_tuple(g)
+    order_rng = seeds.order_rng(seed)
+    history = []
+    t0 = time.perf_counter()
+    for epoch in range(n_epochs):
+        if ctrl is not None and ctrl.due(epoch):
+            cfg, changed = ctrl.allocate(params)
+            if changed:
+                compiled = compiled.recompile(cfg)
+        data = compiled.epoch_data(order_rng)
+        params, state, loss = compiled.step(params, state,
+                                            jnp.asarray(epoch), *data)
+        if verbose and (epoch % eval_every == 0 or epoch == n_epochs - 1):
+            va = eval_fn(params, gt, g.labels,
+                         g.val_mask.astype(jnp.float32))
+            history.append((epoch, float(loss), float(va)))
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - t0
+    extra = ctrl.extras() if ctrl is not None else {}
+    extra.update(compiled.result_extras())
+    extra["cfg"] = cfg
+    extra["plan"] = plan
+    return _result(eval_fn, params, g, gt, history, n_epochs, dt, **extra)

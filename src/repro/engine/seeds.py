@@ -1,0 +1,78 @@
+"""The one place the activation-seed scheme is defined.
+
+Every stochastic-rounding stash in the GNN stack derives its seed from
+two constants:
+
+* an **update ordinal** ``o`` (the epoch for full-graph training, or
+  ``epoch * n_parts + position`` for the mini-batch engine) maps to the
+  base SR seed ``(o + 1) * 7919`` — so ``n_parts = 1`` reproduces the
+  full-graph seeds exactly and ordinal 0 never yields seed 0;
+* layer ``li`` offsets the base seed by ``li * 1013`` so adjacent layers
+  draw decorrelated codes from the counter PRNG.
+
+Before the engine refactor this scheme was re-derived by hand in
+``graph/train.py`` (both engines), ``graph/models.py``, and the arena
+forward — four copies of the same two literals.  Everything now calls
+these helpers; ``tests/test_engine.py`` pins the scheme numerically so a
+drive-by change to either constant breaks loudly instead of silently
+desynchronizing replays.
+
+All helpers accept traced jax values or python ints and return uint32
+(the dtype the counter PRNG consumes); arithmetic wraps mod 2**32 by
+construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Base multiplier of the update-ordinal seed scheme: ``(o + 1) * 7919``.
+SR_SEED_PRIME = 7919
+
+#: Per-layer seed stride: layer li stashes with ``base + li * 1013``.
+LAYER_SEED_STRIDE = 1013
+
+#: Salt for the batch-order shuffle rng of the mini-batch engine.
+ORDER_SALT = 0x5EED_BA5E
+
+#: Knuth multiplicative hash used to derive autoprec probe seeds.
+_PROBE_MULT = 2654435761
+
+
+def sr_seed(ordinal):
+    """Base stochastic-rounding seed for one optimizer-update ordinal.
+
+    ``ordinal`` is the epoch (full-graph) or ``epoch * n_parts + pos``
+    (mini-batch); scalars and arrays (a whole dp group at once) both work.
+    """
+    if isinstance(ordinal, (int, np.integer)):
+        ordinal = np.uint32(ordinal & 0xFFFF_FFFF)
+    return (jnp.asarray(ordinal).astype(jnp.uint32) + jnp.uint32(1)) * \
+        jnp.uint32(SR_SEED_PRIME)
+
+
+def layer_seed(seed, li: int):
+    """Layer li's stash seed given the update's base seed."""
+    return jnp.asarray(seed, jnp.uint32) + jnp.uint32(li * LAYER_SEED_STRIDE)
+
+
+def batch_ordinals(epoch, n_batches: int, update, group: int, micro, dp: int):
+    """Update ordinals of one micro-batch's dp group inside the epoch scan.
+
+    ``epoch``/``update``/``micro`` may be traced scalars (scan carries);
+    returns a (dp,) vector feeding :func:`sr_seed`.
+    """
+    base = epoch * n_batches + update * group
+    return base + micro * dp + jnp.arange(dp)
+
+
+def probe_seeds(seed: int):
+    """Two decorrelated uint32 seeds for the autoprec two-seed grad probe."""
+    h = seed * _PROBE_MULT
+    return (jnp.uint32((h + 101) & 0xFFFF_FFFF),
+            jnp.uint32((h + 211) & 0xFFFF_FFFF))
+
+
+def order_rng(seed: int) -> np.random.Generator:
+    """The numpy rng that draws per-epoch batch orders (host side)."""
+    return np.random.default_rng(seed ^ ORDER_SALT)

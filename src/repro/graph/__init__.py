@@ -5,8 +5,8 @@ from repro.graph.data import (Graph, arxiv_like, cora_like, flickr_like,
                               synthetic_graph)
 from repro.graph.models import GNNConfig, gnn_forward, init_gnn_params
 from repro.graph.sampling import (SubgraphBatch, bfs_partition,
-                                  make_subgraph_batches, random_partition,
-                                  stack_batches)
+                                  group_batches, make_subgraph_batches,
+                                  random_partition, stack_batches)
 from repro.graph.train import (activation_memory_report, train_gnn,
                                train_gnn_batched)
 
@@ -14,7 +14,7 @@ __all__ = [
     "Graph", "arxiv_like", "cora_like", "flickr_like", "synthetic_graph",
     "GNNConfig", "gnn_forward", "init_gnn_params",
     "SubgraphBatch", "bfs_partition", "random_partition",
-    "make_subgraph_batches", "stack_batches",
+    "make_subgraph_batches", "stack_batches", "group_batches",
     "train_gnn", "train_gnn_batched", "activation_memory_report",
     "collect_layer_stats",
 ]

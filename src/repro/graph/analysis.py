@@ -13,6 +13,7 @@ from repro.core import quant as quantmod
 from repro.core import random_projection as rpmod
 from repro.core.autoprec import LayerStats
 from repro.core.variance import js_divergence, model_histogram, optimize_levels
+from repro.engine.seeds import layer_seed
 from repro.graph.models import GNNConfig, _dims, spmm
 
 
@@ -115,8 +116,7 @@ def collect_layer_stats(params, graph, cfg: GNNConfig,
         xs = x
         if comp.rp_ratio > 1:
             # the same seed derivation gnn_forward -> compress uses
-            rp_seed = ((jnp.uint32(seed) + jnp.uint32(li * 1013))
-                       ^ jnp.uint32(0xA5A5_A5A5))
+            rp_seed = layer_seed(seed, li) ^ jnp.uint32(0xA5A5_A5A5)
             xs = rpmod.rp(x, rp_seed, max(1, x.shape[1] // comp.rp_ratio))
         blocks, _ = quantmod.group_reshape(xs, comp.group_size)
         _, rng = quantmod.block_stats(blocks)

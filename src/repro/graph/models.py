@@ -24,8 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pack as packmod
-from repro.core.act_compress import _zero_ct, compressed_matmul
+from repro.core.act_compress import compressed_matmul, zero_ct  # noqa: F401
 from repro.core.compressor import CompressionConfig
+from repro.engine.seeds import layer_seed
 
 
 # ------------------------------------------------------------- 1-bit ReLU
@@ -164,7 +165,7 @@ def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None,
     if plan is not None:
         if dropout_key is not None and cfg.dropout:
             raise ValueError("arena-routed forward does not support dropout")
-        from repro.offload.gnn import arena_gnn_forward
+        from repro.engine.forward import arena_gnn_forward
 
         return arena_gnn_forward(params, graph, cfg, plan, seed=seed,
                                  node_mask=node_mask,
@@ -175,15 +176,15 @@ def gnn_forward(params, graph, cfg: GNNConfig, seed=0, dropout_key=None,
     seed = jnp.asarray(seed, jnp.uint32)
     per_layer = cfg.layer_compression()
     for li, p in enumerate(params):
-        layer_seed = seed + jnp.uint32(li * 1013)
+        lseed = layer_seed(seed, li)
         comp = per_layer[li]
         if cfg.arch == "gcn":
-            z = _maybe_compressed_matmul(h, p["w"], comp, layer_seed) + p["b"]
+            z = _maybe_compressed_matmul(h, p["w"], comp, lseed) + p["b"]
             z = spmm(z, src, dst, gcn_w, n)
         else:  # sage
             agg = spmm(h, src, dst, mean_w, n)
             x = jnp.concatenate([h, agg], axis=1)
-            z = _maybe_compressed_matmul(x, p["w"], comp, layer_seed) + p["b"]
+            z = _maybe_compressed_matmul(x, p["w"], comp, lseed) + p["b"]
         if li < len(params) - 1:
             z = relu_1bit(z)
             if cfg.dropout and dropout_key is not None:

@@ -150,6 +150,17 @@ def stack_batches(batches: list[SubgraphBatch]) -> SubgraphBatch:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
 
 
+def group_batches(stacked: SubgraphBatch, order, n_updates: int,
+                  grad_accum: int, dp: int) -> SubgraphBatch:
+    """Reorder stacked batches and reshape every leaf to the epoch scan's
+    update-group layout ``(n_updates, grad_accum, dp, ...)`` — the data
+    contract of the engine's partition lowering
+    (:class:`repro.engine.compile._CompiledPartition`)."""
+    return jax.tree.map(
+        lambda x: x[order].reshape(n_updates, grad_accum, dp, *x.shape[1:]),
+        stacked)
+
+
 # ---------------------------------------------------------------- sampler
 def _bucket(n: int, multiple: int) -> int:
     return max(multiple, ((n + multiple - 1) // multiple) * multiple)

@@ -1,45 +1,46 @@
-"""GNN training engines: the paper's full-graph loop (Table 1) and the
-partition-sampled mini-batch engine (Cluster-GCN flavor) that opens the
-large-graph regime the memory wins actually target.
+"""GNN training entry points: thin wrappers over the plan-compile-execute
+engine (:mod:`repro.engine`).
 
-``train_gnn`` is the original whole-graph ``value_and_grad`` step;
-``train_gnn_batched`` scans over padded subgraph batches (built by
-:mod:`repro.graph.sampling`) with per-batch activation seeds, optional
-gradient accumulation, donated params/opt state, and data-parallel batch
-sharding over a device mesh — the same shape as
-:func:`repro.launch.steps.make_train_step`.  ``n_parts=1`` is the
-full-graph special case and reproduces ``train_gnn`` results.
+``train_gnn`` (the paper's full-graph loop, Table 1) and
+``train_gnn_batched`` (the partition-sampled mini-batch engine,
+Cluster-GCN flavor) keep their pre-engine signatures and bit-exact
+trajectories, but no longer own any step construction: each builds an
+:class:`~repro.engine.plan.ExecutionPlan` from its kwargs and hands it to
+:func:`repro.engine.runner.run`, which compiles ONE jitted epoch step on the
+single stash-aware ``custom_vjp`` forward.  ``tests/test_engine.py``
+gates the kwarg → plan mapping bit-for-bit against hand-rolled legacy
+loops.
+
+``activation_memory_report`` reads the same plan object the engines
+execute, so the byte/bit accounting cannot drift from what training
+actually stashes.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from functools import partial
-
-import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core import autoprec
-from repro.core.compressor import CompressionConfig
+from repro.engine.plan import ExecutionPlan
+from repro.graph.data import Graph
+from repro.graph.models import GNNConfig, gnn_forward
+from repro.graph.sampling import _bucket
 from repro.offload import (check_policy, device_resident_stash_bytes,
                            device_memory_stats, measure_live_bytes,
                            plan_gnn_stashes)
-from repro.graph.analysis import collect_layer_stats, saved_bytes_per_layer
-from repro.graph.data import Graph
-from repro.graph.models import GNNConfig, gnn_forward, graph_tuple, init_gnn_params
-from repro.graph.sampling import _bucket, make_subgraph_batches, stack_batches
-from repro.optim import AdamWConfig, adamw_init, adamw_update
-from repro.parallel.sharding import dp_size, graph_batch_pspecs, to_named
+from repro.graph.analysis import saved_bytes_per_layer
+from repro.optim import AdamWConfig
 
 
 def _loss_fn(params, graph, labels, mask, cfg, seed, node_mask=None,
              plan=None, offload=None):
+    """The training loss at the pre-engine call shape (kept for tests,
+    benchmarks, and ad-hoc grads): per-op forward when ``plan`` is None,
+    arena-routed engine forward otherwise — both spell the same
+    computation the engine's compiled steps run."""
+    from repro.engine.compile import masked_nll  # lazy: engine ← graph
+
     logits = gnn_forward(params, graph, cfg, seed=seed, node_mask=node_mask,
                          plan=plan, offload=offload)
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
-    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1)
+    return masked_nll(logits, labels, mask)
 
 
 def _accuracy(params, graph, labels, mask, cfg):
@@ -48,99 +49,13 @@ def _accuracy(params, graph, labels, mask, cfg):
     return jnp.sum(correct * mask) / jnp.maximum(mask.sum(), 1)
 
 
-class _Autoprec:
-    """Variance-guided bit-allocation lifecycle shared by both engines.
-
-    Owns the budget (frozen on the first allocation so refreshes re-split
-    the *same* byte ceiling), the current per-layer widths, and the refresh
-    cadence.  ``allocate`` runs the cheap stats pass on the calibration
-    graph it was given — the full graph for ``train_gnn``, a single padded
-    subgraph batch for ``train_gnn_batched`` (so the probe never
-    re-materializes the full-graph activations the batched engine exists
-    to avoid; per-layer moments and noise ratios are scale-invariant) —
-    and calibrates each layer's ``grad_sens`` with a two-seed gradient
-    probe: ``dx`` and the ReLU mask are SR-noise-free, so
-    ``dw_l(s₁) − dw_l(s₂)`` isolates exactly the dequantization noise
-    layer l's stash injects.
-    """
-
-    def __init__(self, gt, labels, tr_mask, cfg: GNNConfig,
-                 bit_budget: float, refresh: int, seed: int, node_mask=None):
-        self.templates = cfg.layer_compression()
-        if all(c is None for c in self.templates):
-            raise ValueError(
-                "bit_budget= needs a GNNConfig with compression configured")
-        self.base_cfg = cfg
-        self.bit_budget = float(bit_budget)
-        self.refresh = int(refresh)
-        self.gt = gt
-        self.labels = labels
-        self.tr_mask = tr_mask
-        self.node_mask = node_mask
-        self.seed = seed
-        self.budget_bytes = None
-        self.bits: tuple[int, ...] | None = None
-        self._grad_fn = jax.jit(jax.grad(_loss_fn), static_argnums=(4,))
-
-    def _probe_grad_sens(self, params, stats):
-        """Realized per-layer dw SR noise at template widths, divided by the
-        bit-scaling curve — so any candidate width re-prices as
-        ``grad_sens * normalized_sr_variance(candidate)``."""
-        s1, s2 = (jnp.uint32((self.seed * 2654435761 + 101) & 0xFFFF_FFFF),
-                  jnp.uint32((self.seed * 2654435761 + 211) & 0xFFFF_FFFF))
-        g1 = self._grad_fn(params, self.gt, self.labels, self.tr_mask,
-                           self.base_cfg, s1, self.node_mask)
-        g2 = self._grad_fn(params, self.gt, self.labels, self.tr_mask,
-                           self.base_cfg, s2, self.node_mask)
-        out = []
-        for st, tmpl, p1, p2 in zip(stats, self.templates, g1, g2):
-            if st is None or tmpl is None:
-                out.append(st)
-                continue
-            noise = float(0.5 * jnp.sum((p1["w"] - p2["w"]) ** 2))
-            sens = noise / max(autoprec.normalized_sr_variance(tmpl), 1e-30)
-            # a zero probe (e.g. untrained head with zero grads) keeps the
-            # range-moment fallback rather than marking the layer free
-            out.append(dataclasses.replace(st, grad_sens=sens or None))
-        return out
-
-    def allocate(self, params) -> tuple[GNNConfig, bool]:
-        """(re)solve the allocation; returns (cfg, changed)."""
-        stats = collect_layer_stats(params, self.gt, self.base_cfg,
-                                    seed=self.seed)
-        if self.budget_bytes is None:
-            self.budget_bytes = autoprec.budget_bytes_for(
-                stats, self.templates, self.bit_budget)
-        stats = self._probe_grad_sens(params, stats)
-        bits = autoprec.allocate_bits(stats, self.templates,
-                                      self.budget_bytes)
-        changed = bits != self.bits
-        self.bits = bits
-        return self.base_cfg.with_layer_bits(bits), changed
-
-    def due(self, epoch: int) -> bool:
-        return self.refresh > 0 and epoch > 0 and epoch % self.refresh == 0
-
-    def extras(self) -> dict:
-        return {"bits_per_layer": list(self.bits),
-                "bit_budget_bytes": self.budget_bytes}
-
-
-def _result(eval_fn, params, g, gt, history, n_epochs, dt, **extra):
-    """Final full-graph val/test metrics + the shared engine result dict
-    (both training engines report through this one contract)."""
-    val = float(eval_fn(params, gt, g.labels, g.val_mask.astype(jnp.float32)))
-    test = float(eval_fn(params, gt, g.labels, g.test_mask.astype(jnp.float32)))
-    return {"test_acc": test, "val_acc": val, "history": history,
-            "epochs_per_sec": n_epochs / dt, "params": params, **extra}
-
-
 def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
               n_epochs: int = 100, seed: int = 0, eval_every: int = 10,
               verbose: bool = False, impl: str | None = None,
               bit_budget: float | None = None, autoprec_refresh: int = 0,
               offload: str | None = None):
-    """Returns dict(test_acc, val_acc, history, epochs_per_sec, params).
+    """Full-graph training; returns dict(test_acc, val_acc, history,
+    epochs_per_sec, params, cfg, plan).
 
     ``impl`` (optional) reroutes the compression stack onto a specific
     kernel backend for the whole job — "jnp" | "interp" | "pallas" | "auto"
@@ -153,8 +68,8 @@ def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
     ceiling and split across layers by minimizing total expected SR
     variance from first-epoch sensitivity stats.  ``autoprec_refresh=k``
     re-collects stats and re-solves every k epochs (0 = allocate once);
-    a changed allocation re-jits the step.  The result dict then carries
-    ``bits_per_layer`` and ``bit_budget_bytes``.
+    a changed allocation recompiles the plan's step.  The result dict
+    then carries ``bits_per_layer`` and ``bit_budget_bytes``.
 
     ``offload`` (optional) routes every layer's saved-for-backward stash
     through one pooled arena (:mod:`repro.offload`): "device" keeps the
@@ -162,56 +77,18 @@ def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
     host after the forward stash and prefetch them one layer ahead of
     the backward walk.  Stash bits and the loss trajectory are identical
     across policies.
+
+    Equivalent plan: ``ExecutionPlan.from_legacy(impl=impl,
+    offload=offload, bit_budget=bit_budget,
+    autoprec_refresh=autoprec_refresh)`` (full-graph sampling).
     """
-    offload = check_policy(offload)
-    if impl is not None:
-        cfg = cfg.with_impl(impl)
-    opt = opt or AdamWConfig(lr=5e-3, weight_decay=0.0)
-    key = jax.random.PRNGKey(seed)
-    params = init_gnn_params(key, cfg, g.n_feats)
-    state = adamw_init(params, opt)
-    gt = graph_tuple(g)
-    tr_mask = g.train_mask.astype(jnp.float32)
+    from repro.engine.runner import run
 
-    ap = None
-    if bit_budget is not None:
-        ap = _Autoprec(gt, g.labels, tr_mask, cfg, bit_budget,
-                       autoprec_refresh, seed)
-        cfg, _ = ap.allocate(params)
-
-    def make_step(cfg):
-        plan = (plan_gnn_stashes(cfg, g.n_feats, g.n_nodes)
-                if offload is not None else None)
-        loss_fn = partial(_loss_fn, plan=plan, offload=offload)
-
-        @partial(jax.jit, donate_argnums=(0, 1), static_argnames=())
-        def step(params, state, epoch, gt, labels, tr_mask):
-            sr_seed = (epoch + 1).astype(jnp.uint32) * jnp.uint32(7919)
-            loss, grads = jax.value_and_grad(loss_fn)(
-                params, gt, labels, tr_mask, cfg, sr_seed)
-            params, state = adamw_update(grads, state, params, opt)
-            return params, state, loss
-        return step
-
-    step = make_step(cfg)
-    eval_fn = jax.jit(partial(_accuracy, cfg=cfg))
-    history = []
-    t0 = time.perf_counter()
-    for epoch in range(n_epochs):
-        if ap is not None and ap.due(epoch):
-            cfg, changed = ap.allocate(params)
-            if changed:
-                step = make_step(cfg)
-        params, state, loss = step(params, state, jnp.asarray(epoch), gt,
-                                   g.labels, tr_mask)
-        if verbose and (epoch % eval_every == 0 or epoch == n_epochs - 1):
-            va = eval_fn(params, gt, g.labels, g.val_mask.astype(jnp.float32))
-            history.append((epoch, float(loss), float(va)))
-    jax.block_until_ready(params)
-    dt = time.perf_counter() - t0
-    extra = ap.extras() if ap is not None else {}
-    extra["cfg"] = cfg
-    return _result(eval_fn, params, g, gt, history, n_epochs, dt, **extra)
+    plan = ExecutionPlan.from_legacy(
+        impl=impl, offload=offload, bit_budget=bit_budget,
+        autoprec_refresh=autoprec_refresh)
+    return run(g, cfg, plan, opt, n_epochs=n_epochs, seed=seed,
+               eval_every=eval_every, verbose=verbose)
 
 
 def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
@@ -234,7 +111,7 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
     matters.
 
     grad_accum   accumulate gradients over this many consecutive batches
-                 per optimizer update (make_train_step's scheme).
+                 per optimizer update.
     mesh         optional jax device mesh: each update consumes
                  ``dp_size(mesh)`` batches in parallel, sharded over the
                  data axes via :func:`repro.parallel.sharding.graph_batch_pspecs`
@@ -250,7 +127,7 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                  Sensitivity stats and the byte ceiling are computed on a
                  single padded batch — the engine's live stash unit — so
                  calibration never re-materializes full-graph activations;
-                 a refresh that changes the allocation re-jits the epoch.
+                 a refresh that changes the allocation recompiles the step.
     offload      pooled-arena stash routing per batch, as in
                  :func:`train_gnn` ("device" | "host" | "pinned-paged");
                  the plan is laid out for one padded batch — the engine's
@@ -258,143 +135,46 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                  (``dp_size(mesh) == 1``): the host store is keyed per
                  forward, not per shard.
 
-    Per-batch activation seeds extend the full-graph scheme: batch ordinal
-    ``b = epoch * n_parts + position`` gets ``sr_seed = (b + 1) * 7919``,
-    so ``n_parts=1`` reproduces ``train_gnn`` seeds exactly.
+    Per-batch activation seeds extend the full-graph scheme
+    (:mod:`repro.engine.seeds`): batch ordinal ``b = epoch * n_parts +
+    position`` gets ``sr_seed = (b + 1) * 7919``, so ``n_parts=1``
+    reproduces ``train_gnn`` seeds exactly.
 
     Evaluation runs full-graph on the final params (the padded batches are
     a *training*-time construct).  Returns the ``train_gnn`` result dict
     plus ``n_parts``, ``updates_per_epoch``, ``batch_nodes``,
     ``batch_edges``.
+
+    Equivalent plan: ``ExecutionPlan.from_legacy(n_parts=n_parts, ...)``
+    with every sampling kwarg forwarded.
     """
-    offload = check_policy(offload)
-    if impl is not None:
-        cfg = cfg.with_impl(impl)
-    opt = opt or AdamWConfig(lr=5e-3, weight_decay=0.0)
-    if batches is None:
-        batches = make_subgraph_batches(
-            g, n_parts, method=method, halo=halo, seed=seed,
-            node_multiple=node_multiple, edge_multiple=edge_multiple,
-            renormalize=renormalize)
-    elif len(batches) != n_parts:
-        raise ValueError(f"prebuilt batches list has {len(batches)} entries "
-                         f"but n_parts={n_parts}")
-    n_batches = len(batches)
-    dp = dp_size(mesh) if mesh is not None else 1
-    if offload in ("host", "pinned-paged") and dp > 1:
-        raise ValueError(
-            f"offload={offload!r} needs an unsharded run (dp_size==1); "
-            f"got dp={dp}")
-    group = dp * grad_accum
-    if n_batches % group:
-        raise ValueError(
-            f"n_parts={n_batches} must be a multiple of dp*grad_accum="
-            f"{dp}*{grad_accum}={group} (whole update groups per epoch)")
-    n_updates = n_batches // group
+    from repro.engine.runner import run
 
-    key = jax.random.PRNGKey(seed)
-    params = init_gnn_params(key, cfg, g.n_feats)
-    state = adamw_init(params, opt)
-    stacked = stack_batches(batches)
-
-    ap = None
-    if bit_budget is not None:
-        # calibrate on one padded batch — the batched engine's live stash
-        # unit — so the probe never re-materializes full-graph activations
-        # (the budget is therefore per batch, matching the actual peak)
-        b0 = batches[0]
-        ap = _Autoprec(b0.graph_tuple(), b0.labels, b0.train_mask, cfg,
-                       bit_budget, autoprec_refresh, seed,
-                       node_mask=b0.node_mask)
-        cfg, _ = ap.allocate(params)
-
-    def make_epoch_step(cfg):
-        plan = (plan_gnn_stashes(cfg, g.n_feats, batches[0].n_nodes)
-                if offload is not None else None)
-
-        @partial(jax.jit, donate_argnums=(0, 1))
-        def epoch_step(params, state, epoch, grouped):
-            # grouped leaves: (n_updates, grad_accum, dp, ...)
-            def update(carry, inp):
-                params, state = carry
-                u, grp = inp
-                base = epoch * n_batches + u * group
-
-                def micro(gsum, inp2):
-                    a, mb = inp2
-                    ords = base + a * dp + jnp.arange(dp)
-                    seeds = (ords + 1).astype(jnp.uint32) * jnp.uint32(7919)
-
-                    def group_loss(p):
-                        losses = jax.vmap(
-                            lambda b, s: _loss_fn(p, b.graph_tuple(),
-                                                  b.labels,
-                                                  b.train_mask, cfg, s,
-                                                  node_mask=b.node_mask,
-                                                  plan=plan, offload=offload)
-                        )(mb, seeds)
-                        return losses.mean()
-
-                    loss, grads = jax.value_and_grad(group_loss)(params)
-                    return jax.tree.map(jnp.add, gsum, grads), loss
-
-                zeros = jax.tree.map(jnp.zeros_like, params)
-                gsum, losses = jax.lax.scan(
-                    micro, zeros, (jnp.arange(grad_accum), grp))
-                grads = jax.tree.map(lambda x: x / grad_accum, gsum)
-                params, state = adamw_update(grads, state, params, opt)
-                return (params, state), losses.mean()
-
-            (params, state), losses = jax.lax.scan(
-                update, (params, state), (jnp.arange(n_updates), grouped))
-            return params, state, losses.mean()
-        return epoch_step
-
-    epoch_step = make_epoch_step(cfg)
-    eval_fn = jax.jit(partial(_accuracy, cfg=cfg))
-    gt = graph_tuple(g)
-    order_rng = np.random.default_rng(seed ^ 0x5EEDBA5E)
-
-    def make_grouped(order):
-        grouped = jax.tree.map(
-            lambda x: x[order].reshape(n_updates, grad_accum, dp,
-                                       *x.shape[1:]), stacked)
-        if mesh is not None:
-            specs = graph_batch_pspecs(grouped, mesh, axis=2)
-            grouped = jax.device_put(grouped, to_named(specs, mesh))
-        return grouped
-
-    reshuffle = shuffle and n_batches > 1
-    grouped = None if reshuffle else make_grouped(np.arange(n_batches))
-    history = []
-    t0 = time.perf_counter()
-    for epoch in range(n_epochs):
-        if ap is not None and ap.due(epoch):
-            cfg, changed = ap.allocate(params)
-            if changed:
-                epoch_step = make_epoch_step(cfg)
-        if reshuffle:
-            grouped = make_grouped(order_rng.permutation(n_batches))
-        params, state, loss = epoch_step(params, state, jnp.asarray(epoch),
-                                         grouped)
-        if verbose and (epoch % eval_every == 0 or epoch == n_epochs - 1):
-            va = eval_fn(params, gt, g.labels, g.val_mask.astype(jnp.float32))
-            history.append((epoch, float(loss), float(va)))
-    jax.block_until_ready(params)
-    dt = time.perf_counter() - t0
-    extra = ap.extras() if ap is not None else {}
-    return _result(eval_fn, params, g, gt, history, n_epochs, dt,
-                   n_parts=n_batches, updates_per_epoch=n_updates,
-                   batch_nodes=batches[0].n_nodes,
-                   batch_edges=batches[0].n_edges, cfg=cfg, **extra)
+    plan = ExecutionPlan.from_legacy(
+        n_parts=n_parts, impl=impl, offload=offload, bit_budget=bit_budget,
+        autoprec_refresh=autoprec_refresh, method=method, halo=halo,
+        node_multiple=node_multiple, edge_multiple=edge_multiple,
+        renormalize=renormalize, shuffle=shuffle, grad_accum=grad_accum)
+    return run(g, cfg, plan, opt, n_epochs=n_epochs, seed=seed,
+               eval_every=eval_every, verbose=verbose, batches=batches,
+               mesh=mesh)
 
 
 def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
                              batch_nodes: int | None = None,
                              node_multiple: int = 64,
-                             offload: str | None = None) -> dict:
+                             offload: str | None = None,
+                             plan: ExecutionPlan | None = None) -> dict:
     """Bytes of *saved-for-backward* activations — the paper's Table-1 "M"
     column model, per layer and (optionally) per subgraph batch.
+
+    Pass the :class:`~repro.engine.plan.ExecutionPlan` the training run
+    executed (``result["plan"]``, or the one handed to ``engine.run``) and
+    the report models exactly what that plan stashes — sampling decides
+    the batched section, the stash policy decides the arena section.  The
+    legacy kwargs (``n_parts=``, ``offload=``) remain as a shorthand that
+    builds the equivalent plan internally, so the two spellings cannot
+    diverge.
 
     Full-graph keys (always present):
 
@@ -407,18 +187,19 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
     * ``per_layer`` — the same accounting, one dict per GNN layer
       (``layer``, ``fp32_bytes``[, ``compressed_bytes``, ``bits``]).
 
-    With ``n_parts > 1`` the mini-batch regime is modeled too: batches run
-    sequentially, so the *peak* stash is a single padded batch.
-    ``batch_nodes`` defaults to ceil(N / n_parts) rounded up to
-    ``node_multiple`` (matching ``make_subgraph_batches`` padding); pass
-    the actual padded count (``train_gnn_batched``'s ``batch_nodes``) when
-    using halo or custom buckets.  The ``batched`` sub-dict then reports
-    ``peak_fp32_bytes``, ``peak_saved_bytes`` (compressed when configured),
-    a per-batch-size ``per_layer`` breakdown, and
-    ``peak_reduction_vs_full`` = full-graph saved bytes / per-batch peak.
+    With partition sampling (``n_parts > 1`` or a partition plan) the
+    mini-batch regime is modeled too: batches run sequentially, so the
+    *peak* stash is a single padded batch.  ``batch_nodes`` defaults to
+    ceil(N / n_parts) rounded up to the plan's ``node_multiple`` (matching
+    ``make_subgraph_batches`` padding); pass the actual padded count
+    (the result dict's ``batch_nodes``) when using halo or custom buckets.
+    The ``batched`` sub-dict then reports ``peak_fp32_bytes``,
+    ``peak_saved_bytes`` (compressed when configured), a per-batch-size
+    ``per_layer`` breakdown, and ``peak_reduction_vs_full`` = full-graph
+    saved bytes / per-batch peak.
 
-    With ``offload`` set ("device" | "host" | "pinned-paged") an ``arena``
-    sub-dict is added: the pooled-arena ledger from the
+    With an arena stash policy (legacy ``offload=``) an ``arena`` sub-dict
+    is added: the pooled-arena ledger from the
     :class:`repro.offload.arena.StashPlan` (``planned_bytes`` split into
     u32/f32 arenas, per-layer rows) plus the *measured* device-peak
     column — ``device_resident_bytes`` is the ledger model of what stays
@@ -427,6 +208,17 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
     against ``jax.live_arrays`` (``measured_live_bytes``) and the
     backend's device memory stats where the platform exposes them.
     """
+    if plan is None:
+        plan = ExecutionPlan.from_legacy(
+            n_parts=n_parts if n_parts > 1 else None,
+            offload=check_policy(offload), node_multiple=node_multiple)
+    if plan.sampling.kind == "partition":
+        n_parts = plan.sampling.n_parts
+        node_multiple = plan.sampling.node_multiple
+    else:
+        n_parts = 1
+    offload = plan.stash.offload
+
     per_layer = saved_bytes_per_layer(cfg, g.n_feats, g.n_nodes)
     # mixed precision: a layer without compression contributes fp32 bytes
     has_comp = any("compressed_bytes" in r for r in per_layer)
@@ -456,22 +248,21 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
             "per_layer": rows_b,
         }
     if offload is not None:
-        offload = check_policy(offload)
         # an explicit batch_nodes wins even at n_parts == 1: the batched
         # engine pads its single batch, and the ledger must describe the
         # plan training actually laid out
         stash_nodes = batch_nodes if batch_nodes is not None else g.n_nodes
-        plan = plan_gnn_stashes(cfg, g.n_feats, stash_nodes)
+        arena_plan = plan_gnn_stashes(cfg, g.n_feats, stash_nodes)
         stats = device_memory_stats()
         out["arena"] = {
             "policy": offload,
             "stash_nodes": stash_nodes,
-            "planned_bytes": plan.total_bytes,
-            "u32_bytes": plan.u32_bytes,
-            "f32_bytes": plan.f32_bytes,
-            "per_layer": plan.per_layer_rows(),
+            "planned_bytes": arena_plan.total_bytes,
+            "u32_bytes": arena_plan.u32_bytes,
+            "f32_bytes": arena_plan.f32_bytes,
+            "per_layer": arena_plan.per_layer_rows(),
             "device_resident_bytes":
-                device_resident_stash_bytes(plan, offload),
+                device_resident_stash_bytes(arena_plan, offload),
             "measured_live_bytes": measure_live_bytes(),
             "device_peak_bytes":
                 stats.get("peak_bytes_in_use") if stats else None,

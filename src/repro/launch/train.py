@@ -30,9 +30,15 @@ from repro.runtime import StragglerMonitor, TrainRunner
 
 def _graph_main(args):
     """--graph-batches path: the partition-sampled GNN engine instead of an
-    LM arch (same launcher, same compression flags, same mesh plumbing)."""
+    LM arch (same launcher, same compression flags, same mesh plumbing).
+
+    Flags lower onto one :class:`~repro.engine.plan.ExecutionPlan`; the
+    engine run and the memory report read the *same* plan object, so the
+    byte/bit accounting describes exactly what this invocation stashed."""
+    from repro.engine import run as engine_run
+    from repro.engine.plan import ExecutionPlan
     from repro.graph import (GNNConfig, activation_memory_report, arxiv_like,
-                             flickr_like, train_gnn_batched)
+                             flickr_like)
 
     maker = {"arxiv": arxiv_like, "flickr": flickr_like}[args.graph_dataset]
     g = maker(scale=args.graph_scale)
@@ -46,16 +52,16 @@ def _graph_main(args):
             else make_local_mesh())
     lr = args.lr if args.lr is not None else 5e-3   # GNN engines' default
     offload = None if args.offload == "none" else args.offload
-    r = train_gnn_batched(
-        g, cfg, n_parts=args.graph_batches, n_epochs=args.steps,
-        opt=AdamWConfig(lr=lr, weight_decay=0.0), seed=0,
-        halo=args.graph_halo, mesh=mesh, verbose=True,
+    plan = ExecutionPlan.from_legacy(
+        n_parts=args.graph_batches, offload=offload,
         bit_budget=args.bit_budget, autoprec_refresh=args.autoprec_refresh,
-        offload=offload)
+        halo=args.graph_halo)
+    print(f"plan: {plan.describe()}")
+    r = engine_run(g, cfg, plan, AdamWConfig(lr=lr, weight_decay=0.0),
+                   n_epochs=args.steps, seed=0, verbose=True, mesh=mesh)
     cfg = r.get("cfg", cfg)   # autoprec may have re-allocated per-layer bits
-    rep = activation_memory_report(g, cfg, n_parts=args.graph_batches,
-                                   batch_nodes=r["batch_nodes"],
-                                   offload=offload)
+    rep = activation_memory_report(g, cfg, batch_nodes=r["batch_nodes"],
+                                   plan=plan)
     if "arena" in rep:
         a = rep["arena"]
         print(f"stash arena[{a['policy']}]: {a['planned_bytes'] / 1e6:.2f} MB "

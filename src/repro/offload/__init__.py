@@ -20,13 +20,16 @@ allocator-visible savings:
   host memory space (TPU/GPU) use memory-kind ``jax.device_put``;
   everywhere else a synchronous pure-callback host store keeps the same
   semantics (and the same bits).
-* :mod:`repro.offload.gnn` — the GNN integration: a whole-forward
-  ``custom_vjp`` that routes every layer's stash through the arena and
-  walks the backward pass layer-by-layer against the (possibly
-  host-resident) arena.
+* :mod:`repro.offload.gnn` — the GNN stash planner
+  (:func:`plan_gnn_stashes`).  The whole-forward ``custom_vjp`` that
+  consumes the plan lives in :mod:`repro.engine.forward`, where arenas
+  are one stash policy among several; this package still re-exports the
+  legacy ``arena_gnn_forward`` spelling.
 
-Entry points: ``train_gnn(offload=...)`` / ``train_gnn_batched(offload=...)``,
-``Model`` with ``ArchConfig.act_offload`` (transformer scan path), and
+Entry points: an arena :class:`~repro.engine.plan.StashPolicy` on any
+``ExecutionPlan`` (legacy ``train_gnn(offload=...)`` /
+``train_gnn_batched(offload=...)``), ``Model`` with
+``ArchConfig.act_offload`` (transformer scan path), and
 ``launch.train --offload``.
 """
 from repro.offload.arena import (StashPlan, arena_init, plan_stashes,

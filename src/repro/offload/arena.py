@@ -16,7 +16,9 @@ arena slices, a read slices them back out and rebuilds the tensor, so
 for the parity gate across mixed bits and ragged blocks).
 
 The plan is hashable (frozen dataclasses of tuples) so it can ride as a
-static argument of jitted steps and ``custom_vjp`` closures; it doubles
+static argument of jitted steps and key the engine's forward cache
+(:mod:`repro.engine.forward` builds one ``custom_vjp`` per
+(config, plan, stash-policy) triple); it doubles
 as the byte *ledger* the memory report and the offload benchmarks read
 (:meth:`StashPlan.per_layer_rows`, :attr:`StashPlan.total_bytes`).
 """

@@ -231,6 +231,47 @@ def fetch_compressed(hs: HostStash) -> CompressedTensor:
                             dtype=jnp.dtype(hs.dtype), cfg=cfg, impl=impl)
 
 
+# ------------------------------------------------------- per-tensor writers
+class _TensorWriter:
+    """Stash kind "tensor": no pooling, no movement — the residual is the
+    classic per-layer pytree of ``CompressedTensor`` / raw-f32 / packed
+    ReLU-mask leaves, exactly what the pre-arena per-op ``custom_vjp``
+    stack saved.  Under the unified engine forward this makes "plain"
+    training and arena-routed training two policies of one code path."""
+
+    def __init__(self, plan, policy, key):
+        self._segs = [dict() for _ in plan.layers]
+
+    def put_ct(self, li, ct):
+        self._segs[li]["ct"] = ct
+
+    def put_raw(self, li, x):
+        self._segs[li]["raw"] = x
+
+    def put_mask(self, li, words):
+        self._segs[li]["mask"] = words
+
+    def residual(self):
+        return tuple(self._segs)
+
+
+class _TensorReader:
+    def __init__(self, plan, policy, res):
+        self._segs = res
+
+    def prefetch(self, li):
+        pass  # residual leaves are live device arrays already
+
+    def get_ct(self, li):
+        return self._segs[li]["ct"]
+
+    def get_raw(self, li):
+        return self._segs[li]["raw"]
+
+    def get_mask(self, li):
+        return self._segs[li]["mask"]
+
+
 # ------------------------------------------------------------ arena writers
 def _stash_tag(li: int) -> int:
     return 2 * li
@@ -461,24 +502,37 @@ class _CallbackReader:
         return self._pop(li, "mask")
 
 
-_WRITERS = {"device": _DeviceWriter, "memkind": _MemkindWriter,
-            "callback": _CallbackWriter}
-_READERS = {"device": _DeviceReader, "memkind": _MemkindReader,
-            "callback": _CallbackReader}
+_WRITERS = {"tensor": _TensorWriter, "device": _DeviceWriter,
+            "memkind": _MemkindWriter, "callback": _CallbackWriter}
+_READERS = {"tensor": _TensorReader, "device": _DeviceReader,
+            "memkind": _MemkindReader, "callback": _CallbackReader}
 
 
-def make_writer(plan: ar.StashPlan, policy: str, key):
+def resolve_stash(kind: str, placement: str) -> str:
+    """Mechanism for an engine :class:`~repro.engine.plan.StashPolicy`:
+    kind "tensor" is its own mechanism (placement is always "device");
+    kind "arena" resolves the placement policy as before."""
+    if kind == "tensor":
+        return "tensor"
+    return resolve_mechanism(placement)
+
+
+def make_writer(plan: ar.StashPlan, policy: str, key, *,
+                kind: str = "arena"):
     """Trace-time stash writer for one forward pass.
 
     ``key`` is a uint32 scalar unique to this forward (the base SR seed) —
     the callback store keys entries by it, so vmapped/scanned forwards
-    with distinct seeds never collide.
+    with distinct seeds never collide.  ``kind`` selects per-tensor vs
+    pooled-arena storage (the engine's stash-policy axis); the legacy
+    arena-only callers omit it.
     """
-    return _WRITERS[resolve_mechanism(policy)](plan, policy, key)
+    return _WRITERS[resolve_stash(kind, policy)](plan, policy, key)
 
 
-def make_reader(plan: ar.StashPlan, policy: str, residual):
+def make_reader(plan: ar.StashPlan, policy: str, residual, *,
+                kind: str = "arena"):
     """Backward-walk reader over a writer's residual.  Call
     ``prefetch(li - 1)`` before consuming layer ``li`` to keep the
     host→device copy one layer ahead (double-buffered)."""
-    return _READERS[resolve_mechanism(policy)](plan, policy, residual)
+    return _READERS[resolve_stash(kind, policy)](plan, policy, residual)

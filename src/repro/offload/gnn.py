@@ -1,41 +1,14 @@
-"""Arena-routed GNN forward/backward: one ``custom_vjp`` over the whole
-network so the saved-for-backward state is a single pooled arena (or its
-host-offloaded handle), not N scattered per-layer residuals.
+"""GNN stash planning (and the legacy home of the arena-routed forward).
 
-Forward: exactly :func:`repro.graph.models.gnn_forward` — same layer
-math, same per-layer seeds (``seed + li*1013``), same padding-mask
-pinning — except every layer's stash (compressed linear input, or raw
-f32 for uncompressed layers, plus the packed 1-bit ReLU sign mask) is
-written into the :class:`~repro.offload.arena.StashPlan` arenas through
-an :mod:`~repro.offload.engine` writer, which moves each segment to host
-right after it is written when the policy asks for it.
-
-Backward: a manual layer-by-layer reverse walk that mirrors what autodiff
-produces on the per-tensor path — ``dx = g @ wᵀ`` exact, ``dw = x̂ᵀ g``
-at the reconstruction (EXACT's estimator, see
-:func:`repro.core.act_compress.compressed_matmul`), ReLU via the saved
-sign mask, and the Â-product transposed by swapping the edge list's
-src/dst roles.  The reader prefetches layer ``li-1``'s segments before
-layer ``li``'s gradient math so host→device copies run one layer ahead
-(double-buffered).
-
-Cotangents are returned for params and features; the edge weights and
-the padding mask are treated as non-differentiable graph constants
-(zero cotangents) — both training engines only ever differentiate with
-respect to params.
+:func:`plan_gnn_stashes` — the static arena layout for one GNN forward —
+lives here with the rest of the offload subsystem.  The whole-network
+``custom_vjp`` that *consumes* the plan moved to
+:mod:`repro.engine.forward`, where it serves every stash policy
+(per-tensor included), not just arenas; :func:`arena_gnn_forward` remains
+as a lazy re-export so pre-engine imports keep working.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import pack as packmod
-from repro.core.act_compress import _zero_ct
-from repro.core.compressor import compress, decompress
-from repro.offload import engine
 from repro.offload.arena import StashPlan, plan_stashes
 
 
@@ -48,6 +21,8 @@ def plan_gnn_stashes(cfg, in_dim: int, n_nodes: int) -> StashPlan:
     tuples included; ``None`` layers are planned as raw f32), and hidden
     layers add the word-aligned 1-bit ReLU mask over their output.
     """
+    # deferred import: graph.models lazily dispatches into the engine,
+    # which plans through this module
     from repro.graph.models import _dims
 
     dims = _dims(cfg, in_dim)
@@ -60,108 +35,12 @@ def plan_gnn_stashes(cfg, in_dim: int, n_nodes: int) -> StashPlan:
     return plan_stashes(tuple(shapes), per_layer, tuple(masks))
 
 
-@functools.lru_cache(maxsize=None)
-def _build(cfg, plan: StashPlan, policy: str):
-    """The custom_vjp forward for one (GNNConfig, StashPlan, policy)."""
-    # deferred for the same import-cycle reason as plan_gnn_stashes
-    # (graph.models lazily dispatches into this module); sharing models'
-    # spmm keeps the Â-product — and hence the bit-parity contract —
-    # single-sourced
-    from repro.graph.models import spmm as _spmm
-
-    from repro.graph.models import gnn_forward
-
-    per_layer = cfg.layer_compression()
-    sage = cfg.arch == "sage"
-    L = len(plan.layers)
-
-    def layer_input(h, src, dst, mean_w, n):
-        if not sage:
-            return h
-        return jnp.concatenate([h, _spmm(h, src, dst, mean_w, n)], axis=1)
-
-    @jax.custom_vjp
-    def f(params, feats, src, dst, gcn_w, mean_w, seed, nm):
-        # primal path (un-differentiated calls): the per-tensor forward is
-        # value-identical and stash-free (compressed_matmul / relu_1bit
-        # primals are plain x @ w / maximum), so don't re-state the layer
-        # math a third time
-        return gnn_forward(params, (feats, src, dst, gcn_w, mean_w), cfg,
-                           seed=seed, node_mask=nm)
-
-    def f_fwd(params, feats, src, dst, gcn_w, mean_w, seed, nm):
-        n = feats.shape[0]
-        writer = engine.make_writer(plan, policy, seed)
-        h = feats * nm[:, None]
-        for li, p in enumerate(params):
-            lseed = seed + jnp.uint32(li * 1013)
-            x = layer_input(h, src, dst, mean_w, n)
-            comp = per_layer[li]
-            if comp is None:
-                writer.put_raw(li, x)
-            else:
-                writer.put_ct(li, compress(x, comp, lseed))
-            z = x @ p["w"] + p["b"]
-            if not sage:
-                z = _spmm(z, src, dst, gcn_w, n)
-            if li < L - 1:
-                writer.put_mask(li, packmod.pack(
-                    (z > 0).astype(jnp.int32).reshape(1, -1), 1))
-                z = jnp.maximum(z, 0.0)
-            h = z * nm[:, None]
-        return h, (params, src, dst, gcn_w, mean_w, nm, writer.residual())
-
-    def f_bwd(res, gy):
-        params, src, dst, gcn_w, mean_w, nm, stash = res
-        n = nm.shape[0]
-        reader = engine.make_reader(plan, policy, stash)
-        reader.prefetch(L - 1)
-        gh = gy
-        dparams = [None] * L
-        for li in reversed(range(L)):
-            if li > 0:
-                reader.prefetch(li - 1)  # one layer ahead of the compute
-            p = params[li]
-            lp = plan.layers[li]
-            g = gh * nm[:, None]
-            if li < L - 1:
-                m = packmod.unpack(reader.get_mask(li), 1, lp.mask_elems)
-                g = g * m.reshape(g.shape).astype(g.dtype)
-            # transpose of the output-side Â product (gcn applies it
-            # after the linear): swap the edge list's src/dst roles
-            gz = g if sage else _spmm(g, dst, src, gcn_w, n)
-            x_hat = (reader.get_raw(li) if lp.cfg is None
-                     else decompress(reader.get_ct(li)))
-            x2 = x_hat.reshape(-1, x_hat.shape[-1])
-            g2 = gz.reshape(-1, gz.shape[-1])
-            dparams[li] = {"w": (x2.T @ g2).astype(p["w"].dtype),
-                           "b": jnp.sum(gz, axis=0).astype(p["b"].dtype)}
-            gx = (gz @ p["w"].T).astype(x_hat.dtype)
-            if sage:
-                d = gx.shape[1] // 2
-                gh = gx[:, :d] + _spmm(gx[:, d:], dst, src, mean_w, n)
-            else:
-                gh = gx
-        dfeats = gh * nm[:, None]
-        return (dparams, dfeats, _zero_ct(src), _zero_ct(dst),
-                jnp.zeros_like(gcn_w), jnp.zeros_like(mean_w),
-                np.zeros((), jax.dtypes.float0), jnp.zeros_like(nm))
-
-    f.defvjp(f_fwd, f_bwd)
-    return f
-
-
 def arena_gnn_forward(params, graph, cfg, plan: StashPlan, seed=0,
                       node_mask=None, policy: str = "device"):
-    """Drop-in for :func:`repro.graph.models.gnn_forward` with the stash
-    routed through a pooled arena under the given offload policy."""
-    engine.check_policy(policy)
-    if len(plan.layers) != cfg.n_layers:
-        raise ValueError(f"plan has {len(plan.layers)} layers for a "
-                         f"{cfg.n_layers}-layer model")
-    feats, src, dst, gcn_w, mean_w = graph
-    nm = (jnp.ones((feats.shape[0],), feats.dtype) if node_mask is None
-          else node_mask.astype(feats.dtype))
-    fn = _build(cfg, plan, policy)
-    return fn(params, feats, src, dst, gcn_w, mean_w,
-              jnp.asarray(seed, jnp.uint32), nm)
+    """Pre-engine spelling of the arena-routed forward; the implementation
+    is :func:`repro.engine.forward.arena_gnn_forward` (imported lazily —
+    the engine package imports this module at load time)."""
+    from repro.engine.forward import arena_gnn_forward as fwd
+
+    return fwd(params, graph, cfg, plan, seed=seed, node_mask=node_mask,
+               policy=policy)
