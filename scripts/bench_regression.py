@@ -1,6 +1,7 @@
 """Bench-regression gate: diff fresh ``BENCH_gnn_batched.json`` /
-``BENCH_offload.json`` epoch-time and peak-bytes columns against the
-committed baselines and fail on >10% regression.
+``BENCH_offload.json`` / ``BENCH_compressor.json`` epoch-time,
+peak-bytes, and fused-ratio columns against the committed baselines and
+fail on >10% regression.
 
   PYTHONPATH=src python scripts/bench_regression.py \\
       --baseline-dir /tmp/bench-baseline [--threshold 0.10]
@@ -50,9 +51,31 @@ def _offload_metrics(d: dict) -> dict:
     return out
 
 
+def _compressor_metrics(d: dict) -> dict:
+    """``BENCH_compressor.json``: stored-bytes are the deterministic
+    compression model (strict); the ``fused_*`` rows gate the
+    fused/unfused time *ratio* — machine-portable compared to raw wall
+    time, but still wall-clock-derived, so it shares the "time" kind
+    (10% by default, widened via ``--time-threshold`` on noisy CI)."""
+    out = {}
+    for r in d["records"]:
+        key = f"{r['case']}/{r['impl']}"
+        if r["case"].startswith("fused_"):
+            out[f"{key}/fwd_time_ratio"] = (
+                r["fused_fwd_us"] / r["unfused_fwd_us"], "time")
+            out[f"{key}/bwd_time_ratio"] = (
+                r["fused_bwd_us"] / r["unfused_bwd_us"], "time")
+        else:
+            out[f"{key}/compress_us"] = (r["compress_us"], "time")
+            out[f"{key}/decompress_us"] = (r["decompress_us"], "time")
+            out[f"{key}/stored_bytes"] = (r["stored_bytes"], "bytes")
+    return out
+
+
 EXTRACTORS = {
     "BENCH_gnn_batched.json": _gnn_batched_metrics,
     "BENCH_offload.json": _offload_metrics,
+    "BENCH_compressor.json": _compressor_metrics,
 }
 
 

@@ -3,10 +3,14 @@
 Default: the §Roofline table in EXPERIMENTS.md from results/dryrun.
 
 ``--bench``: refresh the committed ``BENCH_gnn_batched.json`` /
-``BENCH_offload.json`` / ``BENCH_autoprec.json`` baselines by re-running
-the plan-routed GNN benchmark suites (each lowers explicit
+``BENCH_offload.json`` / ``BENCH_autoprec.json`` /
+``BENCH_compressor.json`` baselines by re-running the plan-routed GNN
+benchmark suites (each lowers explicit
 :class:`repro.engine.plan.ExecutionPlan` objects through ``engine.run``,
-so the refreshed numbers describe exactly what the engine executes).
+so the refreshed numbers describe exactly what the engine executes) plus
+the kernel-throughput sweep (which records the fused matmul-quant rows),
+and re-measure the fused tile autotune cache
+(``results/autotune/fused_tiles.json``) over the benchmark shapes.
 Run this on the CI-class machine whenever an intentional change moves
 the columns ``scripts/bench_regression.py`` gates.
 """
@@ -36,11 +40,19 @@ def fmt(x, p=3):
 
 def refresh_bench_baselines():
     """Re-run the engine-routed bench suites; they rewrite the committed
-    BENCH_*.json in place (the bench-regression gate's baselines)."""
-    from benchmarks import autoprec, gnn_batched, offload
+    BENCH_*.json in place (the bench-regression gate's baselines).  The
+    fused tile autotune cache is re-measured first so the kernel sweep's
+    fused rows record the tiles training would actually dispatch with."""
+    from benchmarks import autoprec, gnn_batched, kernel_throughput, offload
+    from repro.kernels import autotune
 
+    print("re-measuring fused tile autotune cache ...")
+    cache = autotune.autotune([(m, d, n, bits, g) for (_, m, d, n, bits, g, _)
+                               in kernel_throughput.fused_cases()])
+    print(f"  {len(cache)} cache entries -> {autotune.cache_path()}")
     for tag, fn in [("gnn_batched", gnn_batched.main),
-                    ("autoprec", autoprec.main), ("offload", offload.main)]:
+                    ("autoprec", autoprec.main), ("offload", offload.main),
+                    ("kernel", kernel_throughput.main)]:
         print(f"refreshing {tag} baseline ...")
         for name, us, derived in fn():
             print(f"  {name},{us:.1f},{derived}")

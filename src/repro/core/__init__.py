@@ -11,7 +11,9 @@ from repro.core.compressor import (
     CompressionConfig,
     CompressedTensor,
     compress,
+    compress_matmul,
     decompress,
+    decompress_matmul,
 )
 from repro.core.act_compress import (
     compressed_block,
@@ -31,7 +33,8 @@ from repro.core.variance import (
 __all__ = [
     "LayerStats", "allocate_bits", "autoprec",
     "CompressionConfig", "CompressedTensor", "backend", "compress",
-    "decompress", "compressed_block", "compressed_elementwise",
+    "compress_matmul", "decompress", "decompress_matmul",
+    "compressed_block", "compressed_elementwise",
     "compressed_linear", "compressed_matmul", "clipped_normal_params",
     "expected_sr_variance", "expected_sr_variance_uniform", "js_divergence",
     "optimize_levels", "resolve_impl", "use_impl", "variance_reduction",

@@ -30,6 +30,7 @@ already-compiled jit executable is not retraced when the override changes.
 from __future__ import annotations
 
 import contextlib
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +39,17 @@ from repro.core import quant as quantmod
 from repro.kernels import ops
 
 VALID_IMPLS = ("auto", "jnp", "interp", "pallas")
+VALID_FUSED = ("auto", "on", "off")
 
 _OVERRIDE: list[str] = []  # stack managed by use_impl()
+
+
+@functools.lru_cache(maxsize=1)
+def _platform() -> str:
+    """Memoized ``jax.default_backend()`` — ``auto`` resolution sits on
+    every compress/decompress trace, and the platform cannot change
+    within a process, so probe the backend exactly once."""
+    return jax.default_backend()
 
 
 def _check_impl(impl: str) -> str:
@@ -69,7 +79,7 @@ def resolve_impl(impl: str = "auto") -> str:
     """Concrete impl after applying the ``use_impl`` override and ``auto``."""
     impl = _check_impl(_OVERRIDE[-1] if _OVERRIDE else impl)
     if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+        return "pallas" if _platform() == "tpu" else "jnp"
     return impl
 
 
@@ -80,15 +90,23 @@ def available_impl(impl: str) -> str:
     TPU; all impls are bit-identical, so restoring on a CPU host should
     quietly re-route through ``auto`` rather than fail to lower.
     """
-    if impl == "pallas" and jax.default_backend() != "tpu":
+    if impl == "pallas" and _platform() != "tpu":
         return "auto"
     return impl
 
 
 # ------------------------------------------------------------- level tables
-# Single definition lives next to the kernels (the consumer that makes the
-# static-tuple requirement real); re-exported here as the public name.
-normalize_levels = ops.static_levels
+def normalize_levels(levels):
+    """Coerce a VM level table to a static hashable tuple of floats.
+
+    Single definition lives next to the kernels (the consumer that makes
+    the static-tuple requirement real) — this delegates at *call* time
+    rather than aliasing at import time, because this module sits inside
+    the core<->kernels import cycle: entering the cycle from the
+    ``repro.kernels`` side reaches here while ``ops`` is still
+    half-initialized, and an eager ``ops.static_levels`` lookup crashes.
+    """
+    return ops.static_levels(levels)
 
 
 # ----------------------------------------------------------------- routing
@@ -125,6 +143,80 @@ def route_quant(impl: str, bits: int, group_size: int, levels=None) -> str:
     if requested == "auto":
         return "jnp"
     raise ValueError(f"impl={requested!r} cannot run this config: {reason}")
+
+
+# ----------------------------------------------------------- fused routing
+def fused_unsupported(shape, bits: int, group_size: int,
+                      levels=None) -> str | None:
+    """Why the fused matmul+quant kernels can't run this stash (None =
+    they can).  THE eligibility check — dispatch, the engine forward,
+    the benchmarks, and the tests all call this one predicate (or its
+    boolean face :func:`supports_fused`); it may not be re-derived
+    anywhere else.
+
+    Eligibility means the quantization blocks of the stashed operand
+    coincide with whole kernel row tiles:
+
+    * the base quant-kernel constraints hold (bits divides 32, pack-width
+      divides the group, VM table fits the unrolled chain);
+    * the operand is a 2-D (M, D) matrix (that is what the matmul sees);
+    * blocks align to rows — ``D % G == 0`` (whole blocks per row) or
+      ``G % D == 0`` (whole rows per block) — and the element count is
+      whole blocks (``M*D % G == 0``), since the fused pad appends zero
+      *rows* and cannot reproduce the reference replicate-padded ragged
+      tail inside a real block.
+    """
+    reason = quant_kernel_unsupported(bits, group_size,
+                                      normalize_levels(levels))
+    if reason is not None:
+        return reason
+    if len(shape) != 2:
+        return f"fused matmul needs a 2-D operand, got shape {shape}"
+    m, d = int(shape[0]), int(shape[1])
+    if d % group_size and group_size % d:
+        return (f"blocks (G={group_size}) straddle rows of width {d}: "
+                "need D % G == 0 or G % D == 0")
+    if (m * d) % group_size:
+        return (f"{m}x{d} is not whole blocks of {group_size} (the ragged "
+                "tail needs the reference replicate-padding)")
+    return None
+
+
+def supports_fused(shape, bits: int, group_size: int, levels=None) -> bool:
+    """Boolean face of :func:`fused_unsupported`."""
+    return fused_unsupported(shape, bits, group_size, levels) is None
+
+
+def route_fused(fused: str, impl: str, shape, bits: int, group_size: int,
+                levels=None, rp_ratio: int = 0) -> str | None:
+    """Concrete impl the fused matmul-quant pair should run on, or None
+    for the unfused per-layer fallback.
+
+    ``fused="off"`` never fuses.  ``fused="auto"`` fuses only where it
+    wins: eligible shapes on a real kernel backend (resolved "pallas");
+    the jnp/interp reference paths keep the unfused spelling.
+    ``fused="on"`` forces the fused pair on whatever ``impl`` resolves
+    to (the jnp resolution runs the fused *composition* — same bits,
+    useful for parity tests) and raises on ineligible configs instead of
+    silently narrowing the contract.
+    """
+    if fused not in VALID_FUSED:
+        raise ValueError(f"fused={fused!r} not in {VALID_FUSED}")
+    if fused == "off":
+        return None
+    concrete = resolve_impl(impl)
+    reason = fused_unsupported(shape, bits, group_size, levels)
+    if reason is None and rp_ratio > 1:
+        reason = (f"rp_ratio={rp_ratio} projects before quantization; the "
+                  "fused epilogue quantizes the matmul operand itself")
+    if fused == "on":
+        if reason is not None:
+            raise ValueError(f"fused='on' cannot run this config: {reason}")
+        return concrete
+    # auto: fuse only on the real kernel path
+    if reason is not None or concrete != "pallas":
+        return None
+    return concrete
 
 
 def rp_kernel_unsupported(d_in: int, d_out: int, *, tn: int = 128,
@@ -190,6 +282,30 @@ def dequantize_blocks(packed, zero, rng, bits: int, group_size: int,
     return ops.dequantize_packed(packed, zero, rng, bits, group_size,
                                  normalize_levels(levels), impl=concrete,
                                  rows_per_tile=rows_per_tile)
+
+
+def matmul_quantize(x2d, w, bits: int, seed, levels=None, *,
+                    impl: str, group_size: int, tm: int | None = None,
+                    tn: int | None = None):
+    """Fused ``y = x @ w`` + quantize/pack ``x`` in the epilogue.
+
+    ``impl`` must already be a *routed concrete* impl (the return value
+    of :func:`route_fused`); this layer only normalizes the level table
+    and forwards tile choices to the autotuned kernel entry.
+    """
+    return ops.matmul_quantize_packed(x2d, w, bits, seed,
+                                      normalize_levels(levels), impl=impl,
+                                      group_size=group_size, tm=tm, tn=tn)
+
+
+def dequant_matmul(packed, zero, rng, g2d, bits: int, group_size: int,
+                   d: int, levels=None, *, impl: str,
+                   tile_rows: int | None = None, tn: int | None = None):
+    """Fused ``dw = dequant(packed)ᵀ @ g`` (backward-prologue dequant)."""
+    return ops.dequant_matmul_packed(packed, zero, rng, g2d, bits,
+                                     group_size, d,
+                                     normalize_levels(levels), impl=impl,
+                                     tile_rows=tile_rows, tn=tn)
 
 
 def rp(x, seed, d_out: int, *, impl: str = "auto"):

@@ -153,6 +153,64 @@ def compress(x: jnp.ndarray, cfg: CompressionConfig, seed,
                             impl=impl_q)
 
 
+def compress_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg: CompressionConfig,
+                    seed, impl: str | None = None, fused: str = "auto"
+                    ) -> tuple[jnp.ndarray, CompressedTensor]:
+    """Forward matmul with the operand compressed in the epilogue.
+
+    Returns ``(y, ct)`` with ``y = x @ w`` (f32) and ``ct`` the stash of
+    ``x`` — bit-identical packed words to :func:`compress` on the same
+    backend.  Routing is :func:`repro.core.backend.route_fused`: when it
+    declines (``fused="off"``, ineligible shape, or ``auto`` off the real
+    kernel path) this falls back to the unfused two-pass spelling, so the
+    call is always safe as a per-layer drop-in.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    requested = impl if impl is not None else cfg.impl
+    levels = cfg.levels()
+    concrete = backend.route_fused(fused, requested, tuple(x.shape),
+                                   cfg.bits, cfg.group_size, levels,
+                                   cfg.rp_ratio)
+    if concrete is None:
+        ct = compress(x, cfg, seed, impl=impl)
+        return x.astype(jnp.float32) @ w.astype(jnp.float32), ct
+    y, packed, zero, rng = backend.matmul_quantize(
+        x.astype(jnp.float32), w.astype(jnp.float32), cfg.bits, seed,
+        levels, impl=concrete, group_size=cfg.group_size)
+    ct = CompressedTensor(packed, zero, rng,
+                          seed ^ jnp.uint32(0xA5A5_A5A5),
+                          shape=tuple(x.shape), dtype=x.dtype, cfg=cfg,
+                          impl=concrete)
+    return y, ct
+
+
+def decompress_matmul(ct: CompressedTensor, g2d: jnp.ndarray,
+                      impl: str | None = None,
+                      fused: str = "auto") -> jnp.ndarray:
+    """Backward matmul ``dw = x̂ᵀ @ g`` with dequantization fused into the
+    prologue (no HBM materialization of the f32 reconstruction).
+
+    ``g2d`` is the (M, N) output gradient of the layer whose (M, D) input
+    ``ct`` stashes.  Same routing/fallback story as
+    :func:`compress_matmul`; on the fallback path this is exactly
+    ``decompress(ct).Tᵀ``-style two-pass math, so results are
+    bit-identical per impl either way (single row tile).
+    """
+    cfg = ct.cfg
+    requested = impl if impl is not None else backend.available_impl(ct.impl)
+    levels = cfg.levels()
+    concrete = backend.route_fused(fused, requested, ct.shape, cfg.bits,
+                                   cfg.group_size, levels, cfg.rp_ratio)
+    d = ct.shape[-1]
+    if concrete is None:
+        x_hat = decompress(ct, impl=impl)
+        return (x_hat.reshape(-1, d).astype(jnp.float32).T
+                @ g2d.astype(jnp.float32))
+    return backend.dequant_matmul(ct.packed, ct.zero, ct.rng,
+                                  g2d.astype(jnp.float32), cfg.bits,
+                                  cfg.group_size, d, levels, impl=concrete)
+
+
 def decompress(ct: CompressedTensor, impl: str | None = None) -> jnp.ndarray:
     """Backward-pass recovery: unpack+dequant → (optional IRP).
 

@@ -44,10 +44,10 @@ def masked_nll(logits, labels, mask):
 
 
 def engine_loss(params, gt, labels, mask, cfg, seed, node_mask, stash_plan,
-                stash):
+                stash, fused: str = "auto"):
     """Training loss over the engine's unified stash-aware forward."""
     logits = stash_gnn_forward(params, gt, cfg, stash_plan, stash,
-                               seed=seed, node_mask=node_mask)
+                               seed=seed, node_mask=node_mask, fused=fused)
     return masked_nll(logits, labels, mask)
 
 
@@ -70,12 +70,14 @@ class _CompiledFull:
         self.cfg = cfg
         self.stash_plan = plan_gnn_stashes(cfg, self.in_dim, self.n_nodes)
         stash, splan, opt = self.plan.stash, self.stash_plan, self.opt
+        fused = self.plan.kernel.fused
 
         @partial(jax.jit, donate_argnums=(0, 1))
         def step(params, state, epoch, gt, labels, tr_mask):
             sr = seeds.sr_seed(epoch)
             loss, grads = jax.value_and_grad(engine_loss)(
-                params, gt, labels, tr_mask, cfg, sr, None, splan, stash)
+                params, gt, labels, tr_mask, cfg, sr, None, splan, stash,
+                fused)
             params, state = adamw_update(grads, state, params, opt)
             return params, state, loss
 
@@ -146,6 +148,7 @@ class _CompiledPartition:
         self.stash_plan = plan_gnn_stashes(cfg, self.in_dim,
                                            self.batches[0].n_nodes)
         stash, splan, opt = self.plan.stash, self.stash_plan, self.opt
+        fused = self.plan.kernel.fused
         n_batches, group, dp = self.n_batches, self.group, self.dp
         grad_accum, n_updates = self.grad_accum, self.n_updates
 
@@ -167,7 +170,7 @@ class _CompiledPartition:
                             lambda b, s: engine_loss(p, b.graph_tuple(),
                                                      b.labels, b.train_mask,
                                                      cfg, s, b.node_mask,
-                                                     splan, stash)
+                                                     splan, stash, fused)
                         )(mb, srs)
                         return losses.mean()
 

@@ -41,7 +41,7 @@ import numpy as np
 
 from repro.core import pack as packmod
 from repro.core.act_compress import zero_ct
-from repro.core.compressor import compress, decompress
+from repro.core.compressor import compress_matmul, decompress_matmul
 from repro.engine import seeds
 from repro.engine.plan import StashPolicy
 from repro.offload import engine as stash_engine
@@ -53,8 +53,15 @@ TENSOR_STASH = StashPolicy(kind="tensor", placement="device")
 
 
 @functools.lru_cache(maxsize=None)
-def _build(cfg, plan: StashPlan, stash: StashPolicy):
-    """The custom_vjp forward for one (GNNConfig, StashPlan, StashPolicy)."""
+def _build(cfg, plan: StashPlan, stash: StashPolicy, fused: str = "auto"):
+    """The custom_vjp forward for one (GNNConfig, StashPlan, StashPolicy,
+    fused-mode) tuple.
+
+    ``fused`` is :class:`repro.engine.plan.KernelPolicy`'s knob for the
+    quantize-in-epilogue matmul pair; routing (and the per-layer unfused
+    fallback) lives in :func:`repro.core.backend.route_fused`, reached
+    here through the ``compress_matmul`` / ``decompress_matmul``
+    orchestrators."""
     # deferred import: graph.models lazily dispatches into this module;
     # sharing models' spmm keeps the Â-product — and hence the bit-parity
     # contract — single-sourced
@@ -91,9 +98,14 @@ def _build(cfg, plan: StashPlan, stash: StashPolicy):
             comp = per_layer[li]
             if comp is None:
                 writer.put_raw(li, x)
+                z = x @ p["w"] + p["b"]
             else:
-                writer.put_ct(li, compress(x, comp, lseed))
-            z = x @ p["w"] + p["b"]
+                # fused path: x is quantized+packed in the matmul epilogue
+                # (one HBM read of x); routing falls back to the unfused
+                # compress + x @ w spelling per layer when declined
+                y, ct = compress_matmul(x, p["w"], comp, lseed, fused=fused)
+                writer.put_ct(li, ct)
+                z = y + p["b"]
             if not sage:
                 z = _spmm(z, src, dst, gcn_w, n)
             if li < L - 1:
@@ -123,13 +135,21 @@ def _build(cfg, plan: StashPlan, stash: StashPolicy):
             # transpose of the output-side Â product (gcn applies it
             # after the linear): swap the edge list's src/dst roles
             gz = g if sage else _spmm(g, dst, src, gcn_w, n)
-            x_hat = (reader.get_raw(li) if lp.cfg is None
-                     else decompress(reader.get_ct(li)))
-            x2 = x_hat.reshape(-1, x_hat.shape[-1])
             g2 = gz.reshape(-1, gz.shape[-1])
-            dparams[li] = {"w": (x2.T @ g2).astype(p["w"].dtype),
+            if lp.cfg is None:
+                x_hat = reader.get_raw(li)
+                x2 = x_hat.reshape(-1, x_hat.shape[-1])
+                dw = x2.T @ g2
+                xdtype = x_hat.dtype
+            else:
+                # fused path: stash dequantized in the backward matmul's
+                # prologue (no f32 reconstruction round-trips HBM)
+                ct = reader.get_ct(li)
+                dw = decompress_matmul(ct, g2, fused=fused)
+                xdtype = ct.dtype
+            dparams[li] = {"w": dw.astype(p["w"].dtype),
                            "b": jnp.sum(gz, axis=0).astype(p["b"].dtype)}
-            gx = (gz @ p["w"].T).astype(x_hat.dtype)
+            gx = (gz @ p["w"].T).astype(xdtype)
             if sage:
                 d = gx.shape[1] // 2
                 gh = gx[:, :d] + _spmm(gx[:, d:], dst, src, mean_w, n)
@@ -146,7 +166,7 @@ def _build(cfg, plan: StashPlan, stash: StashPolicy):
 
 def stash_gnn_forward(params, graph, cfg, plan: StashPlan,
                       stash: StashPolicy = TENSOR_STASH, seed=0,
-                      node_mask=None):
+                      node_mask=None, fused: str = "auto"):
     """The engine's forward: ``gnn_forward`` values with the layer stashes
     routed through ``stash``'s writer (per-tensor or pooled arena)."""
     if len(plan.layers) != cfg.n_layers:
@@ -155,7 +175,7 @@ def stash_gnn_forward(params, graph, cfg, plan: StashPlan,
     feats, src, dst, gcn_w, mean_w = graph
     nm = (jnp.ones((feats.shape[0],), feats.dtype) if node_mask is None
           else node_mask.astype(feats.dtype))
-    fn = _build(cfg, plan, stash)
+    fn = _build(cfg, plan, stash, fused)
     return fn(params, feats, src, dst, gcn_w, mean_w,
               jnp.asarray(seed, jnp.uint32), nm)
 

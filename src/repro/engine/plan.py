@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.backend import VALID_IMPLS
+from repro.core.backend import VALID_FUSED, VALID_IMPLS
 from repro.offload.engine import POLICIES as STASH_PLACEMENTS
 
 SAMPLING_KINDS = ("full", "partition")
@@ -124,13 +124,27 @@ class StashPolicy:
 @dataclasses.dataclass(frozen=True)
 class KernelPolicy:
     """Kernel backend override for the compression stack (None = keep
-    whatever each layer's ``CompressionConfig.impl`` already says)."""
+    whatever each layer's ``CompressionConfig.impl`` already says).
+
+    ``fused`` governs the quantize-in-epilogue matmul pair
+    (:func:`repro.core.compress_matmul` / ``decompress_matmul``):
+
+    * ``"auto"`` — fuse each layer where it wins: eligible stash shapes
+      on the real Pallas backend; reference impls keep the unfused
+      spelling (so CPU trajectories are unchanged by default);
+    * ``"on"``  — force the fused pair on every layer (ineligible layer
+      configs raise, see :func:`repro.core.backend.route_fused`);
+    * ``"off"`` — never fuse.
+    """
 
     impl: str | None = None
+    fused: str = "auto"
 
     def __post_init__(self):
         if self.impl is not None and self.impl not in VALID_IMPLS:
             raise ValueError(f"impl={self.impl!r} not in {VALID_IMPLS}")
+        if self.fused not in VALID_FUSED:
+            raise ValueError(f"fused={self.fused!r} not in {VALID_FUSED}")
 
     def apply(self, cfg):
         """Reroute a GNNConfig's compression stack onto this backend."""
@@ -146,7 +160,8 @@ class ExecutionPlan:
 
     @classmethod
     def from_legacy(cls, *, n_parts: int | None = None,
-                    impl: str | None = None, offload: str | None = None,
+                    impl: str | None = None, fused: str = "auto",
+                    offload: str | None = None,
                     bit_budget: float | None = None,
                     autoprec_refresh: int = 0, method: str = "bfs",
                     halo: int = 0, node_multiple: int = 64,
@@ -177,7 +192,7 @@ class ExecutionPlan:
         stash = (StashPolicy() if offload is None
                  else StashPolicy(kind="arena", placement=offload))
         return cls(sampling=sampling, precision=precision, stash=stash,
-                   kernel=KernelPolicy(impl=impl))
+                   kernel=KernelPolicy(impl=impl, fused=fused))
 
     @property
     def offload(self) -> str | None:
@@ -194,4 +209,5 @@ class ExecutionPlan:
                      f"(refresh {self.precision.refresh})")
         stash = (f"{self.stash.kind}@{self.stash.placement}")
         return (f"sampling={samp} | precision={prec} | stash={stash} | "
-                f"kernel={self.kernel.impl or 'cfg'}")
+                f"kernel={self.kernel.impl or 'cfg'}"
+                f" fused={self.kernel.fused}")

@@ -52,6 +52,7 @@ def _accuracy(params, graph, labels, mask, cfg):
 def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
               n_epochs: int = 100, seed: int = 0, eval_every: int = 10,
               verbose: bool = False, impl: str | None = None,
+              fused: str = "auto",
               bit_budget: float | None = None, autoprec_refresh: int = 0,
               offload: str | None = None):
     """Full-graph training; returns dict(test_acc, val_acc, history,
@@ -61,6 +62,12 @@ def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
     kernel backend for the whole job — "jnp" | "interp" | "pallas" | "auto"
     (see :mod:`repro.core.backend`); codes are bit-identical across impls.
     Ignored when ``cfg.compression`` is None (fp32 baseline).
+
+    ``fused`` ("auto" | "on" | "off") governs the quantize-in-epilogue
+    matmul pair (:class:`repro.engine.plan.KernelPolicy`): "auto" fuses
+    eligible layers on the real Pallas backend only, "on" forces the
+    fused pair everywhere (parity testing), "off" keeps the two-pass
+    spelling.
 
     ``bit_budget`` (optional) turns on variance-guided adaptive precision
     (:mod:`repro.core.autoprec`): the value is the average stash bits per
@@ -85,7 +92,7 @@ def train_gnn(g: Graph, cfg: GNNConfig, opt: AdamWConfig | None = None,
     from repro.engine.runner import run
 
     plan = ExecutionPlan.from_legacy(
-        impl=impl, offload=offload, bit_budget=bit_budget,
+        impl=impl, fused=fused, offload=offload, bit_budget=bit_budget,
         autoprec_refresh=autoprec_refresh)
     return run(g, cfg, plan, opt, n_epochs=n_epochs, seed=seed,
                eval_every=eval_every, verbose=verbose)
@@ -95,6 +102,7 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                       opt: AdamWConfig | None = None, n_epochs: int = 100,
                       seed: int = 0, *, method: str = "bfs", halo: int = 0,
                       grad_accum: int = 1, mesh=None, impl: str | None = None,
+                      fused: str = "auto",
                       node_multiple: int = 64, edge_multiple: int = 256,
                       renormalize: bool = False, shuffle: bool = True,
                       batches=None, eval_every: int = 10,
@@ -118,6 +126,8 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
                  (grads are averaged across the group).  ``n_parts`` must be
                  a multiple of ``dp_size(mesh) * grad_accum``.
     impl         kernel backend override for the compression stack, as in
+                 :func:`train_gnn`.
+    fused        fused matmul-quant mode ("auto" | "on" | "off"), as in
                  :func:`train_gnn`.
     batches      prebuilt ``SubgraphBatch`` list (skips partitioning —
                  lets benchmarks/tests reuse one sampling pass).
@@ -151,7 +161,8 @@ def train_gnn_batched(g: Graph, cfg: GNNConfig, n_parts: int,
     from repro.engine.runner import run
 
     plan = ExecutionPlan.from_legacy(
-        n_parts=n_parts, impl=impl, offload=offload, bit_budget=bit_budget,
+        n_parts=n_parts, impl=impl, fused=fused, offload=offload,
+        bit_budget=bit_budget,
         autoprec_refresh=autoprec_refresh, method=method, halo=halo,
         node_multiple=node_multiple, edge_multiple=edge_multiple,
         renormalize=renormalize, shuffle=shuffle, grad_accum=grad_accum)

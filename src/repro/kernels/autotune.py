@@ -1,0 +1,227 @@
+"""Tile-size autotuning for the fused matmul-quant kernels.
+
+Two layers:
+
+* a **roofline model** (hardware constants shared with
+  :mod:`benchmarks.roofline` when importable) ranks every legal
+  ``(tm, tn)`` candidate by predicted time — max of the compute term and
+  the HBM term, where larger ``tm`` cuts repeated ``w`` reads and larger
+  ``tn`` cuts repeated ``x`` reads, subject to a VMEM budget;
+* an optional **measurement pass** (:func:`autotune`) times the real
+  kernel over the model's top candidates and persists the winner in a
+  JSON cache keyed on ``(shape, bits, group_size, backend)`` —
+  ``results/autotune/fused_tiles.json`` by default, overridable via
+  ``REPRO_AUTOTUNE_CACHE``.
+
+:func:`get_tiles` is the trace-time read path the dispatch layer uses:
+cache hit → cached tiles; miss → roofline-best default.  It never
+measures (measurement re-jits; ``scripts/refresh_experiments.py --bench``
+refreshes the cache deliberately).
+
+Legality: a row tile must own whole quantization blocks —
+``(tm * d) % group_size == 0`` — which is the same invariant
+:func:`repro.core.backend.supports_fused` enforces for the shape overall.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import math
+import os
+import pathlib
+
+_REPO = pathlib.Path(__file__).resolve().parents[3]
+_DEFAULT_CACHE = _REPO / "results" / "autotune" / "fused_tiles.json"
+
+try:  # single source for the hardware constants when the bench dir is on path
+    from benchmarks.roofline import HBM_BW, PEAK_FLOPS
+except Exception:  # pragma: no cover - library use without the bench dir
+    PEAK_FLOPS = 197e12
+    HBM_BW = 819e9
+
+#: VMEM working-set budget per kernel invocation (bytes); v5e has 128 MB
+#: of VMEM but leave generous headroom for double-buffering + the packed
+#: epilogue outputs.
+VMEM_BUDGET = 8 << 20
+
+
+def cache_path() -> pathlib.Path:
+    return pathlib.Path(os.environ.get("REPRO_AUTOTUNE_CACHE",
+                                       str(_DEFAULT_CACHE)))
+
+
+def _cache_key(kind: str, m: int, d: int, n: int, bits: int,
+               group_size: int, backend: str) -> str:
+    return f"{kind}/{m}x{d}x{n}/b{bits}/g{group_size}/{backend}"
+
+
+@functools.lru_cache(maxsize=1)
+def _load_cache() -> dict:
+    p = cache_path()
+    if p.exists():
+        try:
+            return json.loads(p.read_text())
+        except Exception:
+            return {}
+    return {}
+
+
+def invalidate_cache() -> None:
+    _load_cache.cache_clear()
+
+
+def row_tile_step(d: int, group_size: int) -> int:
+    """Smallest row-tile increment keeping whole blocks per tile."""
+    return group_size // math.gcd(group_size, d)
+
+
+def fwd_candidates(m: int, d: int, n: int, group_size: int):
+    """Legal (tm, tn) pairs for the fused forward, VMEM-feasible."""
+    step = row_tile_step(d, group_size)
+    out = []
+    for base in (8, 16, 32, 64, 128, 256, 512):
+        tm = max(step, step * (base // step)) if step <= base else step
+        tm = min(tm, ((m + step - 1) // step) * step)
+        for tn in (128, 256, 512):
+            tn = min(tn, n)
+            vmem = 4 * (tm * d + d * tn + tm * tn + tm * d // 8)
+            if vmem <= VMEM_BUDGET and (tm, tn) not in out:
+                out.append((tm, tn))
+    return out or [(step, min(128, n))]
+
+
+def fwd_roofline_us(m: int, d: int, n: int, tm: int, tn: int,
+                    bits: int = 2) -> float:
+    """Predicted fused-forward time (µs) for one (tm, tn) choice."""
+    gi = -(-m // tm)
+    gj = -(-n // tn)
+    flops = 2.0 * m * d * n
+    # x read once per N tile, w once per M tile, y written once, packed out
+    bytes_moved = (4.0 * m * d * gj + 4.0 * d * n * gi + 4.0 * m * n
+                   + m * d * bits / 8 + 8.0 * m * d / 64)
+    return max(flops / PEAK_FLOPS, bytes_moved / HBM_BW) * 1e6
+
+
+def bwd_candidates(m: int, d: int, n: int, group_size: int):
+    """Legal (tile_rows, tn) pairs for the fused backward.
+
+    ``tile_rows = m`` (single tile) leads — it is the bit-exact
+    configuration; row-tiled candidates follow for VMEM-constrained
+    deployment shapes.
+    """
+    step = row_tile_step(d, group_size)
+    out = []
+    for tile_rows in (m, 512, 256, 128):
+        if tile_rows > m or tile_rows % step or m % tile_rows:
+            continue
+        for tn in (128, 256):
+            tn = min(tn, n)
+            vmem = 4 * (tile_rows * d + tile_rows * tn + d * tn
+                        + tile_rows * d // 8)
+            if vmem <= VMEM_BUDGET or tile_rows == m:
+                if (tile_rows, tn) not in out:
+                    out.append((tile_rows, tn))
+    return out or [(m, min(128, n))]
+
+
+def get_tiles(kind: str, m: int, d: int, n: int, bits: int,
+              group_size: int, backend: str):
+    """Tiles for one fused call: cache hit, else roofline-best legal pick.
+
+    kind "fwd" → (tm, tn); kind "bwd" → (tile_rows, tn) with tile_rows
+    == m outside the cache (the bit-exact default).
+    """
+    hit = _load_cache().get(_cache_key(kind, m, d, n, bits, group_size,
+                                       backend))
+    if hit:
+        return tuple(hit)
+    if kind == "bwd":
+        return m, min(128, n)
+    cands = fwd_candidates(m, d, n, group_size)
+    best = min(cands, key=lambda c: fwd_roofline_us(m, d, n, *c, bits=bits))
+    return best
+
+
+def autotune(cases, *, impl: str = "auto", repeats: int = 3,
+             write: bool = True) -> dict:
+    """Measure the fused kernels over roofline-ranked candidates and
+    persist the winners.
+
+    ``cases``: iterable of ``(m, d, n, bits, group_size)``.  Returns the
+    updated cache dict.  Measurement runs whatever ``impl`` resolves to
+    on this host (interp on CPU), so a cache written on CPU carries
+    interp-mode winners; the backend component of the key keeps TPU and
+    CPU entries separate.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    backend = jax.default_backend()
+    cache = dict(_load_cache())
+    if ops._resolve(impl) == "jnp":
+        # the jnp reference composition never tiles — "measuring" it would
+        # persist pure timing noise as winners.  Record the same roofline
+        # defaults the trace-time read path would pick, so a CPU-refreshed
+        # cache is consistent instead of misleading.
+        for (m, d, n, bits, group_size) in cases:
+            cache[_cache_key("fwd", m, d, n, bits, group_size, backend)] = \
+                list(min(fwd_candidates(m, d, n, group_size),
+                         key=lambda c: fwd_roofline_us(m, d, n, *c,
+                                                       bits=bits)))
+            cache[_cache_key("bwd", m, d, n, bits, group_size, backend)] = \
+                [m, min(128, n)]
+        if write:
+            p = cache_path()
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(json.dumps(cache, indent=2, sort_keys=True))
+            invalidate_cache()
+        return cache
+    for (m, d, n, bits, group_size) in cases:
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (d, n), jnp.float32)
+        g = jax.random.normal(jax.random.PRNGKey(2), (m, n), jnp.float32)
+
+        def _time(f):
+            jax.block_until_ready(f())
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(f())
+            return (time.perf_counter() - t0) / repeats * 1e6
+
+        best_f, best_f_us = None, float("inf")
+        for (tm, tn) in fwd_candidates(m, d, n, group_size):
+            us = _time(lambda tm=tm, tn=tn: ops.matmul_quantize_packed(
+                x, w, bits, 7, None, impl=impl, group_size=group_size,
+                tm=tm, tn=tn))
+            if us < best_f_us:
+                best_f, best_f_us = (tm, tn), us
+        cache[_cache_key("fwd", m, d, n, bits, group_size, backend)] = \
+            list(best_f)
+
+        _, packed, zero, rng = ops.matmul_quantize_packed(
+            x, w, bits, 7, None, impl=impl, group_size=group_size)
+        cands = bwd_candidates(m, d, n, group_size)
+        if backend != "tpu":
+            # off-TPU the backward stays on the single bit-exact row tile:
+            # a noise-picked row-tiled winner in the cache would silently
+            # trade away the fused==unfused bit-parity the CPU impls gate
+            cands = [c for c in cands if c[0] == m] or cands[:1]
+        best_b, best_b_us = None, float("inf")
+        for (tr, tn) in cands:
+            us = _time(lambda tr=tr, tn=tn: ops.dequant_matmul_packed(
+                packed, zero, rng, g, bits, group_size, d, None,
+                impl=impl, tile_rows=tr, tn=tn))
+            if us < best_b_us:
+                best_b, best_b_us = (tr, tn), us
+        cache[_cache_key("bwd", m, d, n, bits, group_size, backend)] = \
+            list(best_b)
+    if write:
+        p = cache_path()
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(cache, indent=2, sort_keys=True))
+        invalidate_cache()
+    return cache

@@ -1,0 +1,233 @@
+"""Fused quantize-in-epilogue matmul / dequantize-in-prologue matmul.
+
+The two kernels that put the Pallas backend on the training hot path
+(ROADMAP item 1; ActNN/GACT compress activations *as they are produced*):
+
+* :func:`matmul_quant_call` — ``y = x @ w`` whose **epilogue** computes
+  per-block (zero, range) stats over the ``x`` tile, stochastically
+  rounds, and bit-packs the codes while the tile is still in VMEM.  The
+  unfused path reads ``x`` from HBM twice (matmul, then the separate
+  compress pass) and writes the f32 normalized intermediate back out;
+  fused, ``x`` is read once and only the packed words leave the chip.
+* :func:`dequant_matmul_call` — ``dw = x̂ᵀ @ g`` whose **prologue**
+  unpacks + dequantizes the stashed codes tile straight into the matmul
+  operand, removing the HBM materialization of the f32 reconstruction
+  between the unfused dequantize and the backward matmul.
+
+Bit-parity contract
+-------------------
+SR codes are bit-identical to the unfused ``ref`` path by construction:
+per-block stats are the same lane reductions, SR noise is the same
+murmur3 counter hash on the *global* element index (the fused grid offsets
+block ids by ``i * blocks_per_row_tile``), and the strided pack layout is
+shared with :mod:`repro.kernels.quant_blockwise` (whose ``_sr_codes`` /
+``_levels_value`` helpers are reused verbatim).  The forward matmul tile
+``(TM, D) @ (D, TN)`` keeps the full contraction in one dot, so ``y`` is
+the same per-element reduction as the unfused ``x @ w``.  The backward
+contraction over rows is exact when run as a single row tile
+(``tile_rows == M``, the default everywhere bit-parity is gated); tiling
+rows splits the accumulation and agrees to float tolerance only — that
+mode exists for real-TPU VMEM sizing via the autotuner.
+
+Eligibility (quantization blocks must coincide with whole row tiles) is
+owned by :func:`repro.core.backend.supports_fused`; these kernels assert
+the same invariants.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.prng import uniform_from_counter
+from repro.core.quant import EPS as _EPS
+from repro.kernels.quant_blockwise import _levels_value, _sr_codes
+
+
+def _quant_epilogue(x, seed, row0_blocks, bits: int, group_size: int,
+                    levels):
+    """Quantize+pack a (rows, D) tile whose flat layout is whole blocks.
+
+    Returns (packed (nb, W), zero (nb, 1), rng (nb, 1)) with nb =
+    rows * D // group_size — exactly the rows this tile owns of the
+    global packed array.
+    """
+    rows, d = x.shape
+    nb = rows * d // group_size
+    xb = x.reshape(nb, group_size)
+    B = jnp.float32(2**bits - 1)
+    zero = jnp.min(xb, axis=1, keepdims=True)
+    rng = jnp.max(xb, axis=1, keepdims=True) - zero
+    h = jnp.clip((xb - zero) / jnp.maximum(rng, _EPS) * B, 0.0, B)
+    rid = jax.lax.broadcasted_iota(jnp.uint32, xb.shape, 0) + row0_blocks
+    cid = jax.lax.broadcasted_iota(jnp.uint32, xb.shape, 1)
+    u = uniform_from_counter(seed, rid * jnp.uint32(group_size) + cid)
+    codes = _sr_codes(h, u, bits, levels)
+    vpw = 32 // bits
+    w = group_size // vpw
+    packed = jnp.zeros((nb, w), jnp.uint32)
+    for k in range(vpw):
+        packed = packed | (codes[:, k * w:(k + 1) * w] << jnp.uint32(k * bits))
+    return packed, zero, rng
+
+
+def _matmul_quant_kernel(seed_ref, x_ref, w_ref, y_ref, packed_ref,
+                         zero_ref, rng_ref, *, bits: int, group_size: int,
+                         blocks_per_tile: int, levels):
+    x = x_ref[...].astype(jnp.float32)                       # (TM, D)
+    y_ref[...] = jnp.dot(x, w_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+
+    # the stash outputs depend only on the row tile i: emit once, on the
+    # first N-tile visit (the blocks stay resident across j).  program_id
+    # must be read outside the pl.when body — inside the cond jaxpr it is
+    # not rewritten by interpret mode.
+    row0 = (pl.program_id(0) * blocks_per_tile).astype(jnp.uint32)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _epilogue():
+        packed, zero, rng = _quant_epilogue(
+            x, seed_ref[0, 0], row0, bits, group_size, levels)
+        packed_ref[...] = packed
+        zero_ref[...] = zero
+        rng_ref[...] = rng
+
+
+def _matmul_kernel(x_ref, w_ref, y_ref):
+    y_ref[...] = jnp.dot(x_ref[...].astype(jnp.float32),
+                         w_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+
+
+def _build_matmul_quant(m, d, n, bits, group_size, levels, tm, tn,
+                        interpret):
+    assert m % tm == 0 and n % tn == 0, (m, n, tm, tn)
+    assert (tm * d) % group_size == 0, (tm, d, group_size)
+    vpw = 32 // bits
+    assert group_size % vpw == 0, (group_size, vpw)
+    bpt = tm * d // group_size          # packed rows owned by one row tile
+    nb = m * d // group_size
+    wpb = group_size // vpw
+    kern = functools.partial(_matmul_quant_kernel, bits=bits,
+                             group_size=group_size, blocks_per_tile=bpt,
+                             levels=levels)
+    return pl.pallas_call(
+        kern,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((bpt, wpb), lambda i, j: (i, 0)),
+            pl.BlockSpec((bpt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bpt, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((nb, wpb), jnp.uint32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+
+def matmul_quant_call(x2d, w, bits: int, seed, levels=None, *,
+                      group_size: int, tm: int = 128, tn: int = 128,
+                      interpret: bool = False):
+    """Fused forward: ``y = x @ w`` + quantize/pack ``x`` in the epilogue.
+
+    Returns ``(y (M, N) f32, packed (M*D/G, G*bits/32) u32,
+    zero (M*D/G, 1) f32, rng (M*D/G, 1) f32)`` — the stash triplet is
+    bit-identical to ``quant_pack_call`` / the jnp reference on the same
+    ``x``.
+    """
+    m, d = x2d.shape
+    n = w.shape[1]
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+    call = _build_matmul_quant(m, d, n, bits, group_size,
+                               levels, tm, tn, interpret)
+    return call(seed_arr, x2d, w)
+
+
+def matmul_call(x2d, w, *, tm: int = 128, tn: int = 128,
+                interpret: bool = False):
+    """Plain tiled matmul kernel — the unfused comparator the benchmarks
+    time against (same machinery as the fused kernel, minus the epilogue),
+    so fused-vs-unfused measures exactly the fusion win."""
+    m, d = x2d.shape
+    n = w.shape[1]
+    assert m % tm == 0 and n % tn == 0, (m, n, tm, tn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x2d, w)
+
+
+def _dequant_matmul_kernel(packed_ref, zero_ref, rng_ref, g_ref, dw_ref,
+                           *, bits: int, group_size: int, rows: int,
+                           d: int, levels):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    words = packed_ref[...]                                  # (nb, W)
+    vpw = 32 // bits
+    mask = jnp.uint32(2**bits - 1)
+    parts = [(words >> jnp.uint32(kk * bits)) & mask for kk in range(vpw)]
+    codes = jnp.concatenate(parts, axis=1)                   # (nb, G)
+    vals = _levels_value(codes, bits, levels)
+    B = jnp.float32(2**bits - 1)
+    x_hat = (vals * (rng_ref[...] / B) + zero_ref[...]).reshape(rows, d)
+    g = g_ref[...].astype(jnp.float32)                       # (rows, TN)
+    dw_ref[...] += jnp.dot(x_hat.T, g, preferred_element_type=jnp.float32)
+
+
+def dequant_matmul_call(packed, zero, rng, g2d, bits: int, group_size: int,
+                        d: int, levels=None, *, tile_rows: int | None = None,
+                        tn: int = 128, interpret: bool = False):
+    """Fused backward: ``dw = dequant(packed)ᵀ @ g`` (D, N).
+
+    ``packed`` (M*D/G, W) + (zero, rng) (M*D/G, 1) are the stash of an
+    (M, D) activation; ``g2d`` is (M, N).  ``tile_rows`` tiles the row
+    contraction — ``None`` (default) runs it as ONE tile, which keeps the
+    per-element reduction identical to the unfused ``x̂ᵀ @ g`` (the
+    bit-parity configuration); smaller tiles split the accumulation for
+    real-TPU VMEM sizing and agree to float tolerance.
+    """
+    m, n = g2d.shape
+    tile_rows = m if tile_rows is None else tile_rows
+    assert m % tile_rows == 0 and n % tn == 0, (m, n, tile_rows, tn)
+    assert (tile_rows * d) % group_size == 0, (tile_rows, d, group_size)
+    bpt = tile_rows * d // group_size
+    kern = functools.partial(_dequant_matmul_kernel, bits=bits,
+                             group_size=group_size, rows=tile_rows, d=d,
+                             levels=levels)
+    wpb = group_size // (32 // bits)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tn, m // tile_rows),
+        in_specs=[
+            pl.BlockSpec((bpt, wpb), lambda j, k: (k, 0)),
+            pl.BlockSpec((bpt, 1), lambda j, k: (k, 0)),
+            pl.BlockSpec((bpt, 1), lambda j, k: (k, 0)),
+            pl.BlockSpec((tile_rows, tn), lambda j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((d, tn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((d, n), jnp.float32),
+        interpret=interpret,
+    )(packed, zero, rng, g2d)

@@ -11,17 +11,28 @@ counter hash and the pack layout is shared (see quant_blockwise.py).
 """
 from __future__ import annotations
 
+import functools
+import math
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_matmul as fk
 from repro.kernels import ref as refmod
 from repro.kernels import quant_blockwise as qk
 from repro.kernels import rp_matmul as rk
 
 
+@functools.lru_cache(maxsize=1)
+def _platform() -> str:
+    # memoized: the platform cannot change within a process, and this
+    # sits on every trace of every dispatched primitive
+    return jax.default_backend()
+
+
 def _resolve(impl: str) -> str:
     if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+        return "pallas" if _platform() == "tpu" else "jnp"
     return impl
 
 
@@ -93,6 +104,112 @@ def dequantize_packed(packed, zero, rng, bits: int, group_size: int,
                                  rows_per_tile=rows_per_tile,
                                  interpret=(impl == "interp"))
     return out[:n]
+
+
+# ------------------------------------------------------- fused matmul+quant
+def _fused_tiles(kind: str, m: int, d: int, n: int, bits: int,
+                 group_size: int, tm, tn):
+    """Resolve tile sizes: explicit args win, else the autotune cache /
+    roofline default (lazy import keeps ops light for non-fused callers)."""
+    from repro.kernels import autotune
+
+    auto_tm, auto_tn = autotune.get_tiles(kind, m, d, n, bits, group_size,
+                                          jax.default_backend())
+    return (tm if tm is not None else auto_tm,
+            tn if tn is not None else auto_tn)
+
+
+def matmul_quantize_packed(x2d, w, bits: int, seed, levels=None, *,
+                           impl: str = "auto", group_size: int,
+                           tm: int | None = None, tn: int | None = None):
+    """Fused forward: ``y = x @ w`` with ``x`` quantized+packed in the
+    epilogue.  Returns ``(y (M, N), packed u32, zero (nb,), rng (nb,))``
+    — the stash triplet bit-identical to ``quantize_packed`` on the same
+    ``x`` reshaped to whole blocks.
+
+    Caller guarantees eligibility (``core.backend.supports_fused``):
+    ``x.size % group_size == 0`` and blocks never straddle rows unless
+    rows evenly divide into blocks (``d % G == 0`` or ``G % d == 0``).
+    """
+    impl = _resolve(impl)
+    levels = static_levels(levels)
+    m, d = x2d.shape
+    n = w.shape[1]
+    assert (m * d) % group_size == 0, (x2d.shape, group_size)
+    if impl == "jnp":
+        # reference composition — bit-identical by definition (this IS the
+        # unfused path in one call)
+        y = x2d.astype(jnp.float32) @ w.astype(jnp.float32)
+        packed, zero, rng = refmod.quantize_packed(
+            x2d.astype(jnp.float32).reshape(-1, group_size), bits, seed,
+            levels)
+        return y, packed, zero, rng
+    tm, tn = _fused_tiles("fwd", m, d, n, bits, group_size, tm, tn)
+    step = group_size // math.gcd(group_size, d)
+    tm = max(step, (tm // step) * step)
+    xp, _ = _pad_rows(x2d, tm)
+    wp, _ = _pad_cols(w, tn)
+    y, packed, zero, rng = fk.matmul_quant_call(
+        xp, wp, bits, seed, levels, group_size=group_size, tm=tm, tn=tn,
+        interpret=(impl == "interp"))
+    nb = m * d // group_size
+    return y[:m, :n], packed[:nb], zero[:nb, 0], rng[:nb, 0]
+
+
+def dequant_matmul_packed(packed, zero, rng, g2d, bits: int,
+                          group_size: int, d: int, levels=None, *,
+                          impl: str = "auto", tile_rows: int | None = None,
+                          tn: int | None = None):
+    """Fused backward: ``dw = dequant(packed)ᵀ @ g`` for an (M, d) stash.
+
+    The kernel unpacks+dequantizes the stashed tile as the prologue of
+    the backward matmul.  With the default single row tile the result is
+    bit-identical (up to the sign of exact zeros) to the unfused
+    ``dequantize_packed`` → reshape → ``x̂ᵀ @ g``.
+    """
+    impl = _resolve(impl)
+    levels = static_levels(levels)
+    m, n = g2d.shape
+    assert packed.shape[0] * group_size == m * d, (packed.shape, m, d)
+    if impl == "jnp":
+        x_hat = refmod.dequantize_packed(packed, zero, rng, bits,
+                                         group_size, levels)
+        return x_hat.reshape(m, d).T @ g2d.astype(jnp.float32)
+    tile_rows, tn = _fused_tiles("bwd", m, d, n, bits, group_size,
+                                 tile_rows, tn)
+    step = group_size // math.gcd(group_size, d)
+    tile_rows = max(step, (tile_rows // step) * step)
+    gp, _ = _pad_rows(g2d, tile_rows)
+    gp, _ = _pad_cols(gp, tn)
+    pad_blocks = (gp.shape[0] - m) * d // group_size
+    if pad_blocks:
+        # zero-filled fake blocks decode to exact zeros -> zero dw terms
+        p = _pad_rows_to(packed, packed.shape[0] + pad_blocks)
+        z = _pad_rows_to(zero[:, None], zero.shape[0] + pad_blocks)
+        r = _pad_rows_to(rng[:, None], rng.shape[0] + pad_blocks)
+    else:
+        p, z, r = packed, zero[:, None], rng[:, None]
+    dw = fk.dequant_matmul_call(p, z, r, gp, bits, group_size, d, levels,
+                                tile_rows=tile_rows, tn=tn,
+                                interpret=(impl == "interp"))
+    return dw[:, :n]
+
+
+def _pad_cols(x, multiple: int):
+    n = x.shape[1]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((x.shape[0], pad), x.dtype)], 1)
+    return x, n
+
+
+def _pad_rows_to(x, target: int):
+    """Zero-pad rows up to an exact row count (not a multiple)."""
+    pad = target - x.shape[0]
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], 0)
+    return x
 
 
 def _pad2d(x, tm, tk):

@@ -53,7 +53,7 @@ def _graph_main(args):
     lr = args.lr if args.lr is not None else 5e-3   # GNN engines' default
     offload = None if args.offload == "none" else args.offload
     plan = ExecutionPlan.from_legacy(
-        n_parts=args.graph_batches, offload=offload,
+        n_parts=args.graph_batches, fused=args.act_fused, offload=offload,
         bit_budget=args.bit_budget, autoprec_refresh=args.autoprec_refresh,
         halo=args.graph_halo)
     print(f"plan: {plan.describe()}")
@@ -106,6 +106,12 @@ def main(argv=None):
                     choices=["auto", "jnp", "interp", "pallas"],
                     help="kernel backend for the compression stack "
                          "(core.backend dispatch; 'auto' = pallas on TPU)")
+    ap.add_argument("--act-fused", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused quantize-in-epilogue matmul pair for the "
+                         "GNN engine (KernelPolicy.fused): 'auto' fuses "
+                         "eligible layers on the real Pallas backend, "
+                         "'on' forces it, 'off' keeps the two-pass path")
     ap.add_argument("--offload", default="none",
                     choices=["none", "device", "host", "pinned-paged"],
                     help="where saved-for-backward stashes live "

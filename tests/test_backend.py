@@ -227,3 +227,153 @@ def test_gnn_config_with_impl():
     assert cfg.with_impl("interp").compression.impl == "interp"
     assert dataclasses.replace(cfg, compression=None).with_impl(
         "interp").compression is None
+
+
+# ------------------------------------------------------------ fused matmul
+def _fused_case(m, d, bits, seed=0):
+    n = 24
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, d),
+                          jnp.float32) * 2.1 - 0.4
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, n), jnp.float32)
+    gy = jax.random.normal(jax.random.PRNGKey(seed + 2), (m, n), jnp.float32)
+    return x, w, gy
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("m,d,g", [(96, 64, 64),   # aligned, D % G == 0
+                                   (9, 64, 64),    # ragged M (padded rows)
+                                   (10, 32, 64),   # G % D == 0 (2 rows/blk)
+                                   (100, 64, 32)])
+def test_fused_fwd_bit_identical_to_unfused(bits, m, d, g):
+    """Tentpole gate: the fused forward's stash triplet AND the matmul
+    output are bit-identical to the unfused reference, on both kernel
+    spellings, including the zero-row-padded ragged-M path."""
+    x, w, _ = _fused_case(m, d, bits, seed=m + bits)
+    assert backend.supports_fused((m, d), bits, g)
+    y_ref = x @ w
+    pr, zr, rr = ops.quantize_packed(x.reshape(-1, g), bits, 7, None,
+                                     impl="jnp")
+    for impl in ("jnp", "interp"):
+        y, p, z, r = ops.matmul_quantize_packed(x, w, bits, 7, None,
+                                                impl=impl, group_size=g)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(zr))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rr))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("m", [64, 9])
+def test_fused_fwd_vm_levels_bit_identical(bits, m):
+    lv = VM_TABLES[bits]
+    x, w, _ = _fused_case(m, 64, bits, seed=m)
+    pr, zr, rr = ops.quantize_packed(x.reshape(-1, 64), bits, 5, lv,
+                                     impl="jnp")
+    for impl in ("jnp", "interp"):
+        y, p, z, r = ops.matmul_quantize_packed(x, w, bits, 5, lv,
+                                                impl=impl, group_size=64)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("m,d,g", [(96, 64, 64), (9, 64, 64), (100, 64, 32)])
+def test_fused_bwd_bit_identical_to_unfused(bits, m, d, g):
+    """The fused backward (dequantize in the matmul prologue) must equal
+    the unfused dequantize -> x̂ᵀ@g spelling bit-for-bit *per impl* (the
+    repo-wide contract: packed words are cross-impl bit-exact, float
+    reconstruction is per-impl)."""
+    x, w, gy = _fused_case(m, d, bits, seed=m * 3 + bits)
+    p, z, r = ops.quantize_packed(x.reshape(-1, g), bits, 7, None,
+                                  impl="jnp")
+    for impl in ("jnp", "interp"):
+        x_hat = ops.dequantize_packed(p, z, r, bits, g, None, impl=impl)
+        dw_ref = x_hat.reshape(m, d).T @ gy
+        dw = ops.dequant_matmul_packed(p, z, r, gy, bits, g, d, None,
+                                       impl=impl)
+        np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw_ref))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_fused_bwd_vm_levels_bit_identical(bits):
+    lv = VM_TABLES[bits]
+    m, d, g = 64, 48, 16
+    x, w, gy = _fused_case(m, d, bits, seed=bits)
+    p, z, r = ops.quantize_packed(x.reshape(-1, g), bits, 5, lv, impl="jnp")
+    for impl in ("jnp", "interp"):
+        x_hat = ops.dequantize_packed(p, z, r, bits, g, lv, impl=impl)
+        dw_ref = x_hat.reshape(m, d).T @ gy
+        dw = ops.dequant_matmul_packed(p, z, r, gy, bits, g, d, lv,
+                                       impl=impl)
+        np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw_ref))
+
+
+def test_supports_fused_predicate():
+    """Satellite: the single eligibility predicate used by dispatch,
+    engine, benchmarks, and tests."""
+    assert backend.supports_fused((96, 64), 2, 64)        # D % G == 0
+    assert backend.supports_fused((10, 32), 2, 64)        # G % D == 0
+    assert backend.supports_fused((100, 64), 8, 32)
+    # not 2-D
+    assert not backend.supports_fused((4, 8, 16), 2, 64)
+    # blocks straddle rows without dividing evenly
+    assert not backend.supports_fused((96, 96), 2, 64)
+    # ragged tail: element count not whole blocks
+    assert not backend.supports_fused((9, 100), 2, 64)
+    # base quant-kernel constraints still apply
+    assert not backend.supports_fused((96, 64), 3, 64)    # bits !| 32
+    assert not backend.supports_fused(
+        (96, 64), 8, 64, tuple(float(i) for i in range(17)))  # VM > 16
+    # the reason string names the failure
+    assert "straddle" in backend.fused_unsupported((96, 96), 2, 64)
+
+
+def test_route_fused_modes():
+    shape, bits, g = (96, 64), 2, 64
+    # off: never
+    assert backend.route_fused("off", "jnp", shape, bits, g) is None
+    # auto: only on the real kernel backend — on this CPU host "auto"
+    # resolves to jnp, so no fusion (default paths unchanged)
+    assert backend.route_fused("auto", "auto", shape, bits, g) is None
+    assert backend.route_fused("auto", "interp", shape, bits, g) is None
+    # on: forces the fused pair on whatever impl resolves to
+    assert backend.route_fused("on", "jnp", shape, bits, g) == "jnp"
+    assert backend.route_fused("on", "interp", shape, bits, g) == "interp"
+    # on + ineligible raises instead of silently narrowing
+    with pytest.raises(ValueError, match="straddle"):
+        backend.route_fused("on", "jnp", (96, 96), bits, g)
+    with pytest.raises(ValueError, match="rp_ratio"):
+        backend.route_fused("on", "jnp", shape, bits, g, rp_ratio=8)
+    # auto + rp quietly declines
+    assert backend.route_fused("auto", "jnp", shape, bits, g,
+                               rp_ratio=8) is None
+    with pytest.raises(ValueError, match="fused"):
+        backend.route_fused("maybe", "jnp", shape, bits, g)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "interp"])
+def test_compress_matmul_orchestrators_parity(impl):
+    """Public orchestrator gate: compress_matmul/decompress_matmul with
+    fused='on' are bit-identical to the unfused compress + matmul /
+    decompress + matmul spellings per impl, and ride the CompressedTensor
+    pytree unchanged."""
+    from repro.core import compress_matmul, decompress_matmul
+
+    cfg = CompressionConfig(bits=2, group_size=64, impl=impl)
+    x, w, gy = _fused_case(96, 64, 2, seed=17)
+    ct_ref = compress(x, cfg, 7)
+    y_ref = x @ w
+    y, ct = compress_matmul(x, w, cfg, 7, fused="on")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    np.testing.assert_array_equal(np.asarray(ct.packed),
+                                  np.asarray(ct_ref.packed))
+    assert ct.shape == ct_ref.shape and ct.cfg == ct_ref.cfg
+    dw_ref = decompress(ct_ref, impl=impl).reshape(96, 64).T @ gy
+    dw = decompress_matmul(ct, gy, impl=impl, fused="on")
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw_ref))
+    # fused="auto" on a CPU host falls back to the unfused spelling but
+    # still returns the identical (y, ct) pair
+    y2, ct2 = compress_matmul(x, w, cfg, 7, fused="auto")
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y_ref))
+    np.testing.assert_array_equal(np.asarray(ct2.packed),
+                                  np.asarray(ct_ref.packed))

@@ -275,3 +275,47 @@ def test_autoprec_refresh_recompiles_plan(g):
                                                   bit_budget=2.0, refresh=2)
     assert len(r["bits_per_layer"]) == cfg.n_layers
     assert r["bit_budget_bytes"] > 0
+
+
+# ----------------------------------------------------- fused kernel policy
+def test_kernel_policy_fused_knob():
+    assert KernelPolicy().fused == "auto"
+    assert ExecutionPlan.from_legacy(fused="on").kernel == \
+        KernelPolicy(impl=None, fused="on")
+    assert "fused=on" in ExecutionPlan.from_legacy(fused="on").describe()
+    with pytest.raises(ValueError, match="fused"):
+        KernelPolicy(fused="always")
+
+
+@pytest.mark.parametrize("impl", ["jnp", "interp"])
+def test_engine_fused_on_bit_identical_trajectory(g, impl):
+    """Tentpole gate: fused=on plans must produce bit-identical training
+    trajectories (losses AND final params) to fused=off, on every impl.
+    Needs a fused-eligible config: no RP, blocks aligned to the layer
+    input widths (sage doubles the feature dims, all % 64 == 0 here)."""
+    comp = CompressionConfig(bits=2, group_size=64, rp_ratio=0, impl=impl)
+    cfg = _cfg(g, comp=comp)
+    n = 2 if impl == "interp" else 3
+    r_off = train_gnn(g, cfg, n_epochs=n, seed=0, fused="off")
+    r_on = train_gnn(g, cfg, n_epochs=n, seed=0, fused="on")
+    assert r_off["history"] == r_on["history"]
+    _tree_equal(r_off["params"], r_on["params"])
+
+
+def test_engine_fused_auto_default_unchanged(g):
+    """fused='auto' (the default) must not change the CPU trajectory:
+    routing only fuses on the real Pallas backend."""
+    comp = CompressionConfig(bits=2, group_size=64, rp_ratio=0)
+    cfg = _cfg(g, comp=comp)
+    r_auto = train_gnn(g, cfg, n_epochs=2, seed=0)           # fused="auto"
+    r_off = train_gnn(g, cfg, n_epochs=2, seed=0, fused="off")
+    assert r_auto["history"] == r_off["history"]
+    _tree_equal(r_auto["params"], r_off["params"])
+
+
+def test_engine_fused_on_ineligible_raises(g):
+    """fused='on' refuses configs the fused pair cannot run bit-exactly
+    (RP projects before quantization) instead of silently narrowing."""
+    cfg = _cfg(g)   # COMP has rp_ratio=8
+    with pytest.raises(ValueError, match="rp_ratio"):
+        train_gnn(g, cfg, n_epochs=1, seed=0, fused="on")
