@@ -11,7 +11,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (autoprec, fig3_variance_surface,
-                            fig5_vm_dimensionality, gnn_batched,
+                            fig5_vm_dimensionality, gnn_batched, gnn_dist,
                             kernel_throughput, lm_act_compression, offload,
                             roofline, table1_gnn, table2_distribution)
 
@@ -23,6 +23,7 @@ def main() -> None:
         ("lm_act", lm_act_compression.main),
         ("table1", table1_gnn.main),
         ("gnn_batched", gnn_batched.main),  # writes BENCH_gnn_batched.json
+        ("gnn_dist", gnn_dist.main),  # writes BENCH_gnn_dist.json
         ("autoprec", autoprec.main),  # writes BENCH_autoprec.json
         ("offload", offload.main),  # writes BENCH_offload.json
         ("roofline", roofline.main),

@@ -3,8 +3,8 @@
 Default: the §Roofline table in EXPERIMENTS.md from results/dryrun.
 
 ``--bench``: refresh the committed ``BENCH_gnn_batched.json`` /
-``BENCH_offload.json`` / ``BENCH_autoprec.json`` /
-``BENCH_compressor.json`` baselines by re-running the plan-routed GNN
+``BENCH_gnn_dist.json`` / ``BENCH_offload.json`` /
+``BENCH_autoprec.json`` / ``BENCH_compressor.json`` baselines by re-running the plan-routed GNN
 benchmark suites (each lowers explicit
 :class:`repro.engine.plan.ExecutionPlan` objects through ``engine.run``,
 so the refreshed numbers describe exactly what the engine executes) plus
@@ -56,6 +56,19 @@ def refresh_bench_baselines():
         print(f"refreshing {tag} baseline ...")
         for name, us, derived in fn():
             print(f"  {name},{us:.1f},{derived}")
+    # gnn_dist needs its forced-8-device XLA flag set BEFORE jax
+    # initializes, so it refreshes in a subprocess (the script forces the
+    # flag itself when run as __main__)
+    import subprocess
+    print("refreshing gnn_dist baseline (subprocess, forced 8 devices) ...")
+    repo = Path(__file__).resolve().parents[1]
+    out = subprocess.run(
+        [sys.executable, str(repo / "benchmarks" / "gnn_dist.py")],
+        capture_output=True, text=True, check=True,
+        env={**__import__("os").environ,
+             "PYTHONPATH": str(repo / "src") + ":" + str(repo)})
+    for line in out.stdout.strip().splitlines():
+        print(f"  {line}")
 
 
 def main():

@@ -26,12 +26,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine import seeds
-from repro.engine.forward import plan_gnn_stashes, stash_gnn_forward
+from repro.engine.forward import (mesh_gnn_forward, mesh_stash_plan,
+                                  plan_gnn_stashes, stash_gnn_forward)
 from repro.engine.plan import ExecutionPlan
 from repro.graph.models import graph_tuple
 from repro.graph.sampling import (group_batches, make_subgraph_batches,
                                   stack_batches)
 from repro.optim import adamw_update
+from repro.parallel.halo import (build_halo_program, exchange_widths,
+                                 graph_mesh, halo_bytes_per_epoch)
 from repro.parallel.sharding import dp_size, graph_batch_pspecs, to_named
 
 
@@ -225,6 +228,175 @@ class _CompiledPartition:
                 "batch_edges": self.batches[0].n_edges}
 
 
+class _CompiledMesh:
+    """Mesh-sharded lowering: partitions sharded over a ``graph`` mesh
+    axis, trained ``m`` at a time in ``n_parts // m`` rounds with a
+    per-layer halo exchange; features stay host-resident behind a
+    :class:`~repro.offload.pager.FeaturePager`.
+
+    One jitted round step serves every round (round index and epoch are
+    traced); the loss is round-globally normalized —
+    ``psum(Σ nll·mask) / psum(Σ mask)`` — so ``m == n_parts`` reproduces
+    the full-graph ``masked_nll`` exactly and ``m == 1`` reproduces the
+    batched engine's per-batch loss exactly.  Per-device grads are
+    ``psum``-reduced inside the ``shard_map``; the optimizer update runs
+    once per round on the replicated result.
+    """
+
+    kind = "mesh"
+
+    def __init__(self, g, cfg, plan: ExecutionPlan, opt, batches, mesh,
+                 seed: int):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        sp = plan.sampling
+        if batches is not None:
+            raise ValueError("mesh sampling builds its own partition "
+                             "layout; prebuilt batches are a partition-"
+                             "plan resource")
+        if plan.stash.kind != "tensor":
+            raise ValueError("mesh sampling stashes per-tensor residuals "
+                             "on each device (the features are what is "
+                             f"host-resident); stash kind "
+                             f"{plan.stash.kind!r} is unsupported")
+        if plan.precision.kind != "fixed":
+            raise ValueError("mesh sampling does not support autoprec "
+                             "(calibrate on a partition plan and pass the "
+                             "allocated cfg)")
+        if plan.kernel.fused == "on":
+            raise ValueError("mesh sampling composes the per-op compressed "
+                             "stack; fused='on' is unsupported (use "
+                             "'auto'/'off')")
+        if mesh is None or "graph" not in mesh.shape:
+            mesh = graph_mesh(sp.n_parts)
+        self.mesh = mesh
+        self.m = int(mesh.shape["graph"])
+        if sp.n_parts % self.m:
+            raise ValueError(f"n_parts={sp.n_parts} must be a multiple of "
+                             f"the graph-mesh size {self.m}")
+        self.plan = plan
+        self.opt = opt
+        self.n_parts = sp.n_parts
+        self.in_dim = g.n_feats
+        self.prog = build_halo_program(
+            g, sp.n_parts, self.m, method=sp.method, seed=seed,
+            node_multiple=sp.node_multiple, edge_multiple=sp.edge_multiple)
+        self.rounds = self.prog.rounds
+        shard = NamedSharding(mesh, P("graph"))
+        pr = self.prog
+        self._round_const = [
+            tuple(jax.device_put(np.asarray(a[r]), shard)
+                  for a in (pr.labels, pr.train_mask, pr.node_mask,
+                            pr.edge_src, pr.edge_dst, pr.gcn_weight,
+                            pr.mean_weight, pr.send_idx))
+            for r in range(self.rounds)]
+        from repro.offload.pager import FeaturePager
+        self.pager = FeaturePager(pr.features, mesh)
+        self.pager.prefetch(0)
+        self._rebuild(cfg)
+
+    def _rebuild(self, cfg):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        self.cfg = cfg
+        self.stash_plan = mesh_stash_plan(cfg, self.in_dim, self.prog.n_pad)
+        opt, mesh, m, n_parts = self.opt, self.mesh, self.m, self.n_parts
+        axis = "graph" if m > 1 else None
+
+        def device_update(params, srs, feats, labels, tmask, nmask,
+                          esrc, edst, gw, mw, send_idx):
+            # operands carry a leading per-device axis (size 1 inside the
+            # shard_map body; the whole m axis on the single-device path,
+            # where m == 1 makes [0] the same squeeze)
+            feats, labels, tmask, nmask = (feats[0], labels[0], tmask[0],
+                                           nmask[0])
+            esrc, edst, gw, mw = esrc[0], edst[0], gw[0], mw[0]
+            send, sr = send_idx[0], srs[0]
+
+            def loss_fn(p):
+                logits = mesh_gnn_forward(p, feats, esrc, edst, gw, mw,
+                                          nmask, send, cfg, seed=sr,
+                                          axis=axis)
+                logp = jax.nn.log_softmax(logits, axis=-1)
+                nll = -jnp.take_along_axis(logp, labels[:, None],
+                                           axis=1)[:, 0]
+                num, den = jnp.sum(nll * tmask), tmask.sum()
+                if axis is not None:
+                    num = jax.lax.psum(num, axis)
+                    den = jax.lax.psum(den, axis)
+                # the round-global masked_nll: identical to the batched
+                # engine's per-batch loss at m == 1 and to the full-graph
+                # masked_nll at m == n_parts
+                return num / jnp.maximum(den, 1)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            if axis is not None:
+                grads = jax.lax.psum(grads, axis)
+            return loss, grads
+
+        if m > 1:
+            update = shard_map(
+                device_update, mesh=mesh,
+                in_specs=(P(), P("graph")) + (P("graph"),) * 9,
+                out_specs=(P(), P()), check_rep=False)
+        else:
+            update = device_update
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def round_step(params, state, epoch, r, feats, *const):
+            # partition r*m + i on device i: the same ordinal scheme as
+            # the batched engine (update=r, group=dp=m), so m == 1 round
+            # seeds equal the batched run's and n_parts == 1 reduces to
+            # the full-graph sr_seed(epoch)
+            srs = seeds.sr_seed(seeds.batch_ordinals(epoch, n_parts, r, m,
+                                                     0, m))
+            loss, grads = update(params, srs, feats, *const)
+            params, state = adamw_update(grads, state, params, opt)
+            return params, state, loss
+
+        self._round_step = round_step
+
+    def recompile(self, cfg) -> "_CompiledMesh":
+        self._rebuild(cfg)
+        return self
+
+    def step(self, params, state, epoch):
+        losses = []
+        for r in range(self.rounds):
+            feats = self.pager.fetch(r)
+            # next round's pages (next epoch's round 0 on the last round)
+            # move host->device while this round's step computes
+            self.pager.prefetch((r + 1) % self.rounds)
+            params, state, loss = self._round_step(
+                params, state, epoch, jnp.asarray(r), feats,
+                *self._round_const[r])
+            losses.append(loss)
+        return params, state, jnp.mean(jnp.stack(losses))
+
+    def epoch_data(self, order_rng):
+        return ()
+
+    def calibration(self):
+        raise ValueError("mesh sampling does not support autoprec "
+                         "calibration")
+
+    def result_extras(self) -> dict:
+        dims = [self.in_dim, *self.cfg.hidden, self.cfg.n_classes]
+        widths = exchange_widths(self.cfg.arch, dims)
+        return {"n_parts": self.n_parts,
+                "mesh_devices": self.m,
+                "updates_per_epoch": self.rounds,
+                "batch_nodes": self.prog.n_pad,
+                "batch_edges": self.prog.e_pad,
+                "halo_width": self.prog.halo,
+                "halo_edges": self.prog.halo_edges,
+                "dropped_edges": self.prog.dropped_edges,
+                "halo_bytes_per_epoch": halo_bytes_per_epoch(self.prog,
+                                                             widths),
+                "pager": self.pager.stats()}
+
+
 def compile_plan(g, cfg, plan: ExecutionPlan, opt, *, batches=None,
                  mesh=None, seed: int = 0):
     """Lower ``plan`` for graph ``g``: returns a compiled object exposing
@@ -239,4 +411,6 @@ def compile_plan(g, cfg, plan: ExecutionPlan, opt, *, batches=None,
         if batches is not None:
             raise ValueError("prebuilt batches need partition sampling")
         return _CompiledFull(g, cfg, plan, opt)
+    if plan.sampling.kind == "mesh":
+        return _CompiledMesh(g, cfg, plan, opt, batches, mesh, seed)
     return _CompiledPartition(g, cfg, plan, opt, batches, mesh, seed)

@@ -189,3 +189,67 @@ def arena_gnn_forward(params, graph, cfg, plan: StashPlan, seed=0,
     return stash_gnn_forward(params, graph, cfg, plan,
                              StashPolicy(kind="arena", placement=policy),
                              seed=seed, node_mask=node_mask)
+
+
+# --------------------------------------------------------- mesh forward
+def mesh_stash_plan(cfg, in_dim: int, n_local: int) -> StashPlan:
+    """Halo-aware stash planning for the mesh lowering: the plan of ONE
+    device's saved-for-backward bytes.
+
+    Every stash the mesh forward creates is partition-local —
+    ``compressed_matmul`` compresses the local ``(n_local, d)`` linear
+    input (halo rows feed only the *aggregation*, whose VJP needs no
+    float activations), and the ReLU sign mask covers local rows only.
+    So the per-device plan is exactly the single-device plan at the
+    partition's padded node count: the halo strip contributes zero stash
+    bytes by construction.  This ledger backs the mesh arm of
+    ``activation_memory_report`` and the ≥2x per-device peak gate in
+    ``BENCH_gnn_dist.json``.
+    """
+    return plan_gnn_stashes(cfg, in_dim, n_local)
+
+
+def mesh_gnn_forward(params, feats, esrc, edst, gcn_w, mean_w, nm, send_idx,
+                     cfg, *, seed, axis: str | None = "graph"):
+    """One device's slice of the mesh-sharded GNN forward.
+
+    The same per-layer math as :func:`repro.graph.models.gnn_forward`
+    composed from the per-op ``custom_vjp`` stack (``compressed_matmul``,
+    ``relu_1bit``, ``spmm``) — bit-identical gradients to the engine's
+    stash forward per the PR 5 parity gate — with one addition: before
+    each aggregation, :func:`repro.parallel.halo.halo_exchange` extends
+    the aggregated tensor with the round-mates' boundary rows.  GCN
+    exchanges the biased pre-aggregation output (receivers need the
+    sender's full ``x @ w + b`` value); SAGE exchanges ``h`` ahead of its
+    input-side mean aggregation.  Edge tables come pre-extended from
+    :func:`repro.parallel.halo.build_halo_program`; ``axis=None`` (or a
+    zero halo width) runs the identical single-device computation.
+
+    Only local activations are ever stashed for backward — see
+    :func:`mesh_stash_plan`.
+    """
+    from repro.core.act_compress import compressed_matmul
+    from repro.graph.models import relu_1bit, spmm
+    from repro.parallel.halo import halo_exchange
+
+    per_layer = cfg.layer_compression()
+    n = feats.shape[0]
+    seed = jnp.asarray(seed, jnp.uint32)
+    h = feats * nm[:, None]
+    for li, p in enumerate(params):
+        lseed = seeds.layer_seed(seed, li)
+        comp = per_layer[li]
+        if cfg.arch == "gcn":
+            z = (h @ p["w"] if comp is None
+                 else compressed_matmul(h, p["w"], lseed, comp)) + p["b"]
+            z = spmm(halo_exchange(z, send_idx, axis), esrc, edst, gcn_w, n)
+        else:  # sage
+            agg = spmm(halo_exchange(h, send_idx, axis), esrc, edst,
+                       mean_w, n)
+            x = jnp.concatenate([h, agg], axis=1)
+            z = (x @ p["w"] if comp is None
+                 else compressed_matmul(x, p["w"], lseed, comp)) + p["b"]
+        if li < len(params) - 1:
+            z = relu_1bit(z)
+        h = z * nm[:, None]
+    return h

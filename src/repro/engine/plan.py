@@ -33,16 +33,31 @@ import dataclasses
 from repro.core.backend import VALID_FUSED, VALID_IMPLS
 from repro.offload.engine import POLICIES as STASH_PLACEMENTS
 
-SAMPLING_KINDS = ("full", "partition")
+SAMPLING_KINDS = ("full", "partition", "mesh")
 PRECISION_KINDS = ("fixed", "autoprec")
 STASH_KINDS = ("tensor", "arena")
 
 
 @dataclasses.dataclass(frozen=True)
 class SamplingPolicy:
-    """Full-graph, or partition-sampled padded mini-batches."""
+    """Full-graph, partition-sampled padded mini-batches, or mesh-sharded
+    partition-parallel training.
 
-    kind: str = "full"            # "full" | "partition"
+    ``kind="mesh"`` shards the ``n_parts`` partitions across a ``graph``
+    device mesh axis of size ``m`` (``m`` must divide ``n_parts``) and
+    trains them in ``n_parts // m`` rounds with a per-layer halo exchange
+    between the round's co-resident partitions
+    (:mod:`repro.parallel.halo`); the full feature matrix stays
+    host-resident behind :class:`repro.offload.pager.FeaturePager`.
+    ``m == 1`` is exactly the batched engine (static round order, one
+    partition live at a time); ``m == n_parts`` is exact distributed
+    full-graph training.  The ``halo``/``renormalize``/``grad_accum``/
+    ``shuffle`` knobs belong to the partition engine: mesh halo context
+    is structural (the exchange), rounds run one update each in static
+    order.
+    """
+
+    kind: str = "full"            # "full" | "partition" | "mesh"
     n_parts: int = 1
     method: str = "bfs"           # "bfs" | "random"
     halo: int = 0
@@ -63,6 +78,19 @@ class SamplingPolicy:
         if self.kind == "full" and self.n_parts != 1:
             raise ValueError("full-graph sampling is incompatible with "
                              f"n_parts={self.n_parts}")
+        if self.kind == "mesh":
+            if self.grad_accum != 1:
+                raise ValueError("mesh sampling runs one update per round; "
+                                 f"grad_accum={self.grad_accum} needs "
+                                 "kind='partition'")
+            if self.halo != 0:
+                raise ValueError("mesh halo context is structural (the "
+                                 "per-layer exchange); the sampling halo "
+                                 "knob applies to kind='partition' only")
+            if self.renormalize:
+                raise ValueError("mesh sampling slices full-graph "
+                                 "aggregation weights; renormalize needs "
+                                 "kind='partition'")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,8 +230,12 @@ class ExecutionPlan:
     def describe(self) -> str:
         """One-line human summary (launcher / benchmark logs)."""
         s = self.sampling
-        samp = ("full-graph" if s.kind == "full"
-                else f"partition x{s.n_parts} ({s.method}, halo={s.halo})")
+        if s.kind == "full":
+            samp = "full-graph"
+        elif s.kind == "mesh":
+            samp = f"mesh x{s.n_parts} ({s.method})"
+        else:
+            samp = f"partition x{s.n_parts} ({s.method}, halo={s.halo})"
         prec = ("fixed" if self.precision.kind == "fixed"
                 else f"autoprec {self.precision.bit_budget} bits/elt "
                      f"(refresh {self.precision.refresh})")

@@ -2,19 +2,22 @@
 full-graph and partition-sampled mini-batch training."""
 from repro.graph.analysis import collect_layer_stats
 from repro.graph.data import (Graph, arxiv_like, cora_like, flickr_like,
-                              synthetic_graph)
+                              papers100m_like, stream_edge_chunks,
+                              synthetic_graph, synthetic_graph_streamed)
 from repro.graph.models import GNNConfig, gnn_forward, init_gnn_params
 from repro.graph.sampling import (SubgraphBatch, bfs_partition,
                                   group_batches, make_subgraph_batches,
                                   random_partition, stack_batches)
 from repro.graph.train import (activation_memory_report, train_gnn,
-                               train_gnn_batched)
+                               train_gnn_batched, train_gnn_mesh)
 
 __all__ = [
     "Graph", "arxiv_like", "cora_like", "flickr_like", "synthetic_graph",
+    "papers100m_like", "stream_edge_chunks", "synthetic_graph_streamed",
     "GNNConfig", "gnn_forward", "init_gnn_params",
     "SubgraphBatch", "bfs_partition", "random_partition",
     "make_subgraph_batches", "stack_batches", "group_batches",
-    "train_gnn", "train_gnn_batched", "activation_memory_report",
+    "train_gnn", "train_gnn_batched", "train_gnn_mesh",
+    "activation_memory_report",
     "collect_layer_stats",
 ]

@@ -205,18 +205,23 @@ def autotune(cases, *, impl: str = "auto", repeats: int = 3,
         _, packed, zero, rng = ops.matmul_quantize_packed(
             x, w, bits, 7, None, impl=impl, group_size=group_size)
         cands = bwd_candidates(m, d, n, group_size)
-        if backend != "tpu":
-            # off-TPU the backward stays on the single bit-exact row tile:
-            # a noise-picked row-tiled winner in the cache would silently
-            # trade away the fused==unfused bit-parity the CPU impls gate
-            cands = [c for c in cands if c[0] == m] or cands[:1]
         best_b, best_b_us = None, float("inf")
+        best_single, best_single_us = None, float("inf")
         for (tr, tn) in cands:
             us = _time(lambda tr=tr, tn=tn: ops.dequant_matmul_packed(
                 packed, zero, rng, g, bits, group_size, d, None,
                 impl=impl, tile_rows=tr, tn=tn))
+            if tr == m and us < best_single_us:
+                best_single, best_single_us = (tr, tn), us
             if us < best_b_us:
                 best_b, best_b_us = (tr, tn), us
+        if (best_b[0] != m and best_single is not None
+                and not best_b_us < 0.9 * best_single_us):
+            # the row-tiled backward is deterministic (fixed-order tree
+            # reduction) but not bit-equal to the single-tile order —
+            # persist a split-accumulation winner only on a clear (>10%)
+            # measured win, never on timing noise
+            best_b = best_single
         cache[_cache_key("bwd", m, d, n, bits, group_size, backend)] = \
             list(best_b)
     if write:

@@ -25,9 +25,13 @@ shared with :mod:`repro.kernels.quant_blockwise` (whose ``_sr_codes`` /
 ``(TM, D) @ (D, TN)`` keeps the full contraction in one dot, so ``y`` is
 the same per-element reduction as the unfused ``x @ w``.  The backward
 contraction over rows is exact when run as a single row tile
-(``tile_rows == M``, the default everywhere bit-parity is gated); tiling
-rows splits the accumulation and agrees to float tolerance only — that
-mode exists for real-TPU VMEM sizing via the autotuner.
+(``tile_rows == M``, the default everywhere bit-parity is gated).
+Tiling rows splits the accumulation into per-tile partials combined by a
+**fixed-order pairwise tree** (:func:`_tree_sum`): bit-stable
+run-to-run and across backends/grid schedules (the order is a pure
+function of the tile count), agreeing with the single-tile order to
+float tolerance — so the autotuner may pick tiled backward candidates
+off-TPU too, whenever they actually win.
 
 Eligibility (quantization blocks must coincide with whole row tiles) is
 owned by :func:`repro.core.backend.supports_fused`; these kernels assert
@@ -179,12 +183,6 @@ def matmul_call(x2d, w, *, tm: int = 128, tn: int = 128,
 def _dequant_matmul_kernel(packed_ref, zero_ref, rng_ref, g_ref, dw_ref,
                            *, bits: int, group_size: int, rows: int,
                            d: int, levels):
-    k = pl.program_id(1)
-
-    @pl.when(k == 0)
-    def _init():
-        dw_ref[...] = jnp.zeros_like(dw_ref)
-
     words = packed_ref[...]                                  # (nb, W)
     vpw = 32 // bits
     mask = jnp.uint32(2**bits - 1)
@@ -194,7 +192,28 @@ def _dequant_matmul_kernel(packed_ref, zero_ref, rng_ref, g_ref, dw_ref,
     B = jnp.float32(2**bits - 1)
     x_hat = (vals * (rng_ref[...] / B) + zero_ref[...]).reshape(rows, d)
     g = g_ref[...].astype(jnp.float32)                       # (rows, TN)
-    dw_ref[...] += jnp.dot(x_hat.T, g, preferred_element_type=jnp.float32)
+    # each row tile writes its own partial — no cross-iteration += whose
+    # summation order the grid schedule would own.  The fixed-order tree
+    # reduction over the K partials happens outside the kernel.
+    dw_ref[...] = jnp.dot(x_hat.T, g,
+                          preferred_element_type=jnp.float32)[None]
+
+
+def _tree_sum(parts):
+    """Fixed-order pairwise reduction over the leading axis.
+
+    Deterministic by construction: level l adds partial ``2i`` to partial
+    ``2i+1`` (odd tails ride along unadded), independent of grid schedule
+    or backend — the accumulation order is a pure function of K.
+    """
+    k = parts.shape[0]
+    while k > 1:
+        half = k // 2
+        paired = parts[: 2 * half]
+        parts = jnp.concatenate(
+            [paired[0::2] + paired[1::2], parts[2 * half:]], axis=0)
+        k = parts.shape[0]
+    return parts[0]
 
 
 def dequant_matmul_call(packed, zero, rng, g2d, bits: int, group_size: int,
@@ -204,30 +223,36 @@ def dequant_matmul_call(packed, zero, rng, g2d, bits: int, group_size: int,
 
     ``packed`` (M*D/G, W) + (zero, rng) (M*D/G, 1) are the stash of an
     (M, D) activation; ``g2d`` is (M, N).  ``tile_rows`` tiles the row
-    contraction — ``None`` (default) runs it as ONE tile, which keeps the
-    per-element reduction identical to the unfused ``x̂ᵀ @ g`` (the
-    bit-parity configuration); smaller tiles split the accumulation for
-    real-TPU VMEM sizing and agree to float tolerance.
+    contraction — ``None`` (default) runs it as ONE tile, whose single
+    dot keeps the per-element reduction identical to the unfused
+    ``x̂ᵀ @ g`` (the bit-parity configuration).  Smaller tiles (real-TPU
+    VMEM sizing via the autotuner) emit one ``(D, TN)`` partial per row
+    tile and combine them with :func:`_tree_sum`: bit-stable run-to-run
+    and across grid schedules, float-tolerance vs the single-tile order.
     """
     m, n = g2d.shape
     tile_rows = m if tile_rows is None else tile_rows
     assert m % tile_rows == 0 and n % tn == 0, (m, n, tile_rows, tn)
     assert (tile_rows * d) % group_size == 0, (tile_rows, d, group_size)
     bpt = tile_rows * d // group_size
+    k_tiles = m // tile_rows
     kern = functools.partial(_dequant_matmul_kernel, bits=bits,
                              group_size=group_size, rows=tile_rows, d=d,
                              levels=levels)
     wpb = group_size // (32 // bits)
-    return pl.pallas_call(
+    parts = pl.pallas_call(
         kern,
-        grid=(n // tn, m // tile_rows),
+        grid=(n // tn, k_tiles),
         in_specs=[
             pl.BlockSpec((bpt, wpb), lambda j, k: (k, 0)),
             pl.BlockSpec((bpt, 1), lambda j, k: (k, 0)),
             pl.BlockSpec((bpt, 1), lambda j, k: (k, 0)),
             pl.BlockSpec((tile_rows, tn), lambda j, k: (k, j)),
         ],
-        out_specs=pl.BlockSpec((d, tn), lambda j, k: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((d, n), jnp.float32),
+        out_specs=pl.BlockSpec((1, d, tn), lambda j, k: (k, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((k_tiles, d, n), jnp.float32),
         interpret=interpret,
     )(packed, zero, rng, g2d)
+    if k_tiles == 1:
+        return parts[0]
+    return _tree_sum(parts)

@@ -36,11 +36,13 @@ def _graph_main(args):
     engine run and the memory report read the *same* plan object, so the
     byte/bit accounting describes exactly what this invocation stashed."""
     from repro.engine import run as engine_run
-    from repro.engine.plan import ExecutionPlan
+    from repro.engine.plan import (ExecutionPlan, KernelPolicy,
+                                   SamplingPolicy)
     from repro.graph import (GNNConfig, activation_memory_report, arxiv_like,
-                             flickr_like)
+                             flickr_like, papers100m_like)
 
-    maker = {"arxiv": arxiv_like, "flickr": flickr_like}[args.graph_dataset]
+    maker = {"arxiv": arxiv_like, "flickr": flickr_like,
+             "papers100m": papers100m_like}[args.graph_dataset]
     g = maker(scale=args.graph_scale)
     comp = None
     if args.act_mode == "act":
@@ -48,17 +50,37 @@ def _graph_main(args):
                                  rp_ratio=8, impl=args.act_impl)
     cfg = GNNConfig(arch=args.graph_arch, hidden=(256, 256),
                     n_classes=g.num_classes, compression=comp)
-    mesh = (make_production_mesh() if args.production_mesh
-            else make_local_mesh())
     lr = args.lr if args.lr is not None else 5e-3   # GNN engines' default
     offload = None if args.offload == "none" else args.offload
-    plan = ExecutionPlan.from_legacy(
-        n_parts=args.graph_batches, fused=args.act_fused, offload=offload,
-        bit_budget=args.bit_budget, autoprec_refresh=args.autoprec_refresh,
-        halo=args.graph_halo)
+    if args.mesh_parts:
+        # mesh-sharded partition-parallel engine: the graph mesh is built
+        # by the compiler (largest divisor of n_parts the host allows);
+        # stash/precision knobs belong to the other engines and raise
+        plan = ExecutionPlan(
+            sampling=SamplingPolicy(kind="mesh", n_parts=args.mesh_parts,
+                                    shuffle=False),
+            kernel=KernelPolicy(fused=args.act_fused))
+        mesh = None
+    else:
+        mesh = (make_production_mesh() if args.production_mesh
+                else make_local_mesh())
+        plan = ExecutionPlan.from_legacy(
+            n_parts=args.graph_batches, fused=args.act_fused,
+            offload=offload, bit_budget=args.bit_budget,
+            autoprec_refresh=args.autoprec_refresh, halo=args.graph_halo)
     print(f"plan: {plan.describe()}")
     r = engine_run(g, cfg, plan, AdamWConfig(lr=lr, weight_decay=0.0),
                    n_epochs=args.steps, seed=0, verbose=True, mesh=mesh)
+    if args.mesh_parts:
+        pg = r["pager"]
+        print(f"mesh: {r['mesh_devices']} devices x "
+              f"{r['updates_per_epoch']} rounds, halo width "
+              f"{r['halo_width']} rows, {r['dropped_edges']} cross-round "
+              f"edges dropped, {r['halo_bytes_per_epoch'] / 1e6:.2f} MB "
+              f"halo traffic/epoch")
+        print(f"feature pager: {pg['host_bytes'] / 1e6:.2f} MB host-resident "
+              f"in {pg['n_pages']} pages/round, overlap "
+              f"{pg['overlap_frac']:.2f}")
     cfg = r.get("cfg", cfg)   # autoprec may have re-allocated per-layer bits
     rep = activation_memory_report(g, cfg, batch_nodes=r["batch_nodes"],
                                    plan=plan)
@@ -77,7 +99,12 @@ def _graph_main(args):
           f"{r['updates_per_epoch']} updates/epoch")
     print(f"epochs={args.steps} val_acc={r['val_acc']:.4f} "
           f"test_acc={r['test_acc']:.4f} S={r['epochs_per_sec']:.2f} e/s")
-    if "batched" in rep:
+    if "mesh" in rep:
+        print(f"per-device peak saved-activation bytes: "
+              f"{rep['mesh']['per_device_saved_bytes'] / 1e6:.2f} MB "
+              f"({rep['mesh']['peak_reduction_vs_full']:.1f}x below "
+              f"full-graph)")
+    elif "batched" in rep:
         print(f"peak saved-activation bytes/batch: "
               f"{rep['batched']['peak_saved_bytes'] / 1e6:.2f} MB "
               f"({rep['batched']['peak_reduction_vs_full']:.1f}x below "
@@ -130,8 +157,14 @@ def main(argv=None):
                     help="train the GNN stack with the partition-sampled "
                          "mini-batch engine (N_PARTS subgraph batches; "
                          "--steps counts epochs) instead of an LM arch")
+    ap.add_argument("--mesh-parts", type=int, default=0, metavar="N_PARTS",
+                    help="train the GNN stack with the mesh-sharded "
+                         "partition-parallel engine: N_PARTS partitions "
+                         "sharded over a 'graph' device mesh axis with "
+                         "per-layer halo exchange and host-resident "
+                         "feature paging (--steps counts epochs)")
     ap.add_argument("--graph-dataset", default="arxiv",
-                    choices=["arxiv", "flickr"])
+                    choices=["arxiv", "flickr", "papers100m"])
     ap.add_argument("--graph-scale", type=float, default=0.02)
     ap.add_argument("--graph-arch", default="sage", choices=["sage", "gcn"])
     ap.add_argument("--graph-halo", type=int, default=0,
@@ -146,10 +179,14 @@ def main(argv=None):
                          "allocation every N epochs (0 = allocate once)")
     args = ap.parse_args(argv)
 
-    if args.graph_batches:
+    if args.graph_batches and args.mesh_parts:
+        ap.error("--graph-batches and --mesh-parts are different engines; "
+                 "pick one")
+    if args.graph_batches or args.mesh_parts:
         return _graph_main(args)
     if args.arch is None:
-        ap.error("--arch is required unless --graph-batches is set")
+        ap.error("--arch is required unless --graph-batches or "
+                 "--mesh-parts is set")
 
     cfg = get(args.arch)
     if args.smoke:

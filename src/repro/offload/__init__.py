@@ -42,6 +42,7 @@ from repro.offload.engine import (POLICIES, check_policy,
                                   host_store_bytes, make_reader, make_writer,
                                   measure_live_bytes, offload_compressed)
 from repro.offload.gnn import arena_gnn_forward, plan_gnn_stashes
+from repro.offload.pager import FeaturePager
 
 __all__ = [
     "StashPlan", "plan_stashes", "arena_init",
@@ -51,5 +52,5 @@ __all__ = [
     "make_reader", "measure_live_bytes", "host_store_bytes",
     "device_resident_stash_bytes", "device_memory_stats",
     "offload_compressed", "fetch_compressed",
-    "arena_gnn_forward", "plan_gnn_stashes",
+    "arena_gnn_forward", "plan_gnn_stashes", "FeaturePager",
 ]

@@ -1,0 +1,112 @@
+"""Host-resident feature pager for mesh-sharded training.
+
+The mesh engine never keeps the full feature matrix on device: the
+:class:`~repro.parallel.halo.HaloProgram`'s ``(rounds, m, n_pad, F)``
+feature tensor stays host-resident, split into fixed-size row pages
+(:data:`repro.offload.engine.PAGE_WORDS` f32 words per page — the same
+DMA-friendly granularity the stash arena's pinned-paged policy uses), and
+:class:`FeaturePager` ships one round's pages to the mesh ahead of use:
+
+* ``prefetch(r)`` issues the ``jax.device_put`` of every page of round
+  ``r`` — asynchronous under XLA, so the host→device copies overlap the
+  *current* round's layer compute (double-buffered, like the stash
+  engine's one-layer-ahead backward prefetch);
+* ``fetch(r)`` blocks until round ``r``'s pages are device-resident and
+  concatenates them back into the ``(m, n_pad, F)`` round tensor, sharded
+  over the ``graph`` axis.
+
+On platforms with a pinned host memory space the pages are staged there
+at construction (memory-kind ``device_put``); on CPU the host pages are
+plain numpy (host memory *is* the default space).  The pager records
+blocked-vs-inflight wall time per fetch; ``stats()['overlap_frac']`` is
+the fraction of copy time hidden behind compute — the number
+``BENCH_gnn_dist.json`` reports.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.offload.engine import PAGE_WORDS, host_memory_kind
+
+
+class FeaturePager:
+    """Pages one round of partition features to the mesh at a time."""
+
+    def __init__(self, features: np.ndarray, mesh, *,
+                 page_rows: int | None = None):
+        if features.ndim != 4:
+            raise ValueError("features must be (rounds, m, n_pad, F); got "
+                             f"shape {features.shape}")
+        self.rounds = int(features.shape[0])
+        n_pad, f = int(features.shape[2]), int(features.shape[3])
+        self.page_rows = (int(page_rows) if page_rows
+                          else max(1, PAGE_WORDS // max(1, f)))
+        self._dev = NamedSharding(mesh, P("graph"))
+        kind = host_memory_kind("pinned-paged") or host_memory_kind("host")
+        self.host_kind = kind or "numpy"
+        host = (NamedSharding(mesh, P("graph"), memory_kind=kind)
+                if kind else None)
+        self._pages: list[list] = []
+        for r in range(self.rounds):
+            pages = [np.ascontiguousarray(features[r, :, i:i + self.page_rows])
+                     for i in range(0, n_pad, self.page_rows)]
+            if host is not None:
+                pages = [jax.device_put(p, host) for p in pages]
+            self._pages.append(pages)
+        self.n_pages = len(self._pages[0])
+        self.host_bytes = int(features.nbytes)
+        self.round_bytes = int(features.nbytes // self.rounds)
+        self._inflight: dict[int, tuple[list, float]] = {}
+        self._blocked_s = 0.0
+        self._span_s = 0.0
+        self._fetches = 0
+        self._prefetch_hits = 0
+
+    def prefetch(self, r: int) -> None:
+        """Start moving round ``r``'s pages to the mesh (idempotent until
+        the round is fetched)."""
+        if r in self._inflight:
+            return
+        t0 = time.perf_counter()
+        handles = [jax.device_put(p, self._dev) for p in self._pages[r]]
+        self._inflight[r] = (handles, t0)
+
+    def fetch(self, r: int):
+        """Round ``r``'s ``(m, n_pad, F)`` features, device-resident and
+        sharded over the ``graph`` axis.  Consumes the prefetch."""
+        if r in self._inflight:
+            self._prefetch_hits += 1
+        else:
+            self.prefetch(r)
+        handles, t0 = self._inflight.pop(r)
+        t_wait = time.perf_counter()
+        for h in handles:
+            h.block_until_ready()
+        t_done = time.perf_counter()
+        self._blocked_s += t_done - t_wait
+        self._span_s += max(t_done - t0, 1e-12)
+        self._fetches += 1
+        if len(handles) == 1:
+            return handles[0]
+        return jnp.concatenate(handles, axis=1)
+
+    def stats(self) -> dict:
+        span = self._span_s
+        return {
+            "fetches": self._fetches,
+            "prefetch_hits": self._prefetch_hits,
+            "n_pages": self.n_pages,
+            "page_rows": self.page_rows,
+            "host_kind": self.host_kind,
+            "host_bytes": self.host_bytes,
+            "round_bytes": self.round_bytes,
+            "blocked_s": self._blocked_s,
+            "span_s": span,
+            "overlap_frac": (0.0 if span == 0.0
+                             else max(0.0, 1.0 - self._blocked_s / span)),
+        }

@@ -1,4 +1,9 @@
+from repro.parallel.halo import (HaloProgram, build_halo_program,
+                                 exchange_widths, graph_mesh,
+                                 halo_bytes_per_epoch, halo_exchange)
 from repro.parallel.sharding import (batch_pspecs, cache_pspecs,
                                      param_pspecs, to_named)
 
-__all__ = ["batch_pspecs", "cache_pspecs", "param_pspecs", "to_named"]
+__all__ = ["batch_pspecs", "cache_pspecs", "param_pspecs", "to_named",
+           "HaloProgram", "build_halo_program", "exchange_widths",
+           "graph_mesh", "halo_bytes_per_epoch", "halo_exchange"]

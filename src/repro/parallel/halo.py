@@ -1,0 +1,257 @@
+"""Partition-parallel halo exchange over a ``graph`` mesh axis.
+
+The mesh sampling policy (``SamplingPolicy(kind="mesh")``) shards graph
+partitions across devices: a mesh of ``m`` devices trains ``n_parts``
+partitions in ``rounds = n_parts // m`` rounds, round ``r`` hosting
+partitions ``[r*m, (r+1)*m)`` with partition ``r*m + i`` on device ``i``.
+Edges whose endpoints live in different *rounds* are dropped (the
+Cluster-GCN approximation, applied at round granularity — ``m == n_parts``
+keeps every edge and is exact distributed full-graph training, while
+``m == 1`` degenerates to the batched engine's per-partition subgraphs);
+edges that cross partitions *within* a round are kept and serviced by a
+halo exchange: before each aggregation, every device gathers the boundary
+rows its round-mates need into a padded ``(m, H, F)`` send buffer and one
+``jax.lax.all_to_all`` ships them, so each device only ever materializes
+its own partition's activations plus an ``m*H``-row halo strip.
+
+Everything here is **static**: :func:`build_halo_program` precomputes, on
+the host, the per-partition padded node/edge tables (extended source
+indices pointing into the halo strip) and the ``send_idx`` gather maps,
+with one global halo width ``H`` (max boundary-set size over all ordered
+partition pairs) so a single jitted step serves every round.
+
+Padding is inert by the same construction as
+:mod:`repro.graph.sampling`: pad feature rows are zero, pad edges carry
+weight 0 and point at local node 0, pad send slots gather local row 0 but
+no edge ever references the corresponding halo rows — forward values and
+(scatter-add transposed) gradients are untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph.data import Graph
+from repro.graph.sampling import _bucket, bfs_partition, random_partition
+
+
+def graph_mesh(n_parts: int):
+    """1-D device mesh over the ``graph`` axis: the largest divisor of
+    ``n_parts`` that fits this host's device count, so every round hosts
+    the same number of partitions."""
+    devs = jax.devices()
+    m = max(k for k in range(1, min(n_parts, len(devs)) + 1)
+            if n_parts % k == 0)
+    return jax.sharding.Mesh(np.asarray(devs[:m]), ("graph",))
+
+
+@dataclasses.dataclass
+class HaloProgram:
+    """Static per-round device tables for mesh-sharded training.
+
+    Leading axes are ``(rounds, m, ...)``: round ``r``'s slice is
+    device-sharded over the ``graph`` axis at run time.  ``features``
+    stays a host-side numpy array — the feature pager
+    (:class:`repro.offload.pager.FeaturePager`) owns its movement.
+    """
+
+    n_parts: int
+    group: int                 # m — partitions co-resident per round
+    rounds: int
+    n_pad: int                 # padded nodes per partition (static)
+    e_pad: int                 # padded edges per partition (static)
+    halo: int                  # H — padded halo rows per (sender, receiver)
+    part: np.ndarray           # (N,) global partition assignment
+    features: np.ndarray       # (rounds, m, n_pad, F) f32 — host-resident
+    labels: np.ndarray         # (rounds, m, n_pad) i32
+    train_mask: np.ndarray     # (rounds, m, n_pad) f32 — owned real rows
+    node_mask: np.ndarray      # (rounds, m, n_pad) f32 — real rows
+    edge_src: np.ndarray       # (rounds, m, e_pad) i32 — extended indices
+    edge_dst: np.ndarray       # (rounds, m, e_pad) i32 — local indices
+    gcn_weight: np.ndarray     # (rounds, m, e_pad) f32
+    mean_weight: np.ndarray    # (rounds, m, e_pad) f32
+    send_idx: np.ndarray       # (rounds, m, m, H) i32 — sender-local rows
+    n_real_nodes: np.ndarray   # (rounds, m) i32
+    n_real_edges: np.ndarray   # (rounds, m) i32
+    dropped_edges: int         # cross-round edges (the mesh approximation)
+    halo_edges: int            # kept edges with a remote (in-round) source
+
+
+def build_halo_program(g: Graph, n_parts: int, group: int, *,
+                       method: str = "bfs", seed: int = 0,
+                       node_multiple: int = 64,
+                       edge_multiple: int = 256) -> HaloProgram:
+    """Precompute the static mesh layout for ``g``.
+
+    Partitioning reuses the batched engine's partitioners with the same
+    seed, owned-node order (ascending global id), edge order (global),
+    and pad buckets — so ``group == 1`` reproduces
+    :func:`repro.graph.sampling.make_subgraph_batches` layouts exactly
+    (the m=1 ≡ batched parity gate in ``tests/test_parallel.py``).
+    """
+    if n_parts % group:
+        raise ValueError(f"n_parts={n_parts} must be a multiple of the "
+                         f"graph-mesh size {group}")
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    n = g.n_nodes
+    if n_parts == 1:
+        part = np.zeros(n, np.int64)
+    elif method == "random":
+        part = random_partition(n, n_parts, seed)
+    elif method == "bfs":
+        part = bfs_partition(src, dst, n, n_parts, seed)
+    else:
+        raise ValueError(f"unknown partition method {method!r}")
+    rounds = n_parts // group
+
+    owned = [np.flatnonzero(part == p) for p in range(n_parts)]
+    n_pad = _bucket(max(len(o) for o in owned), node_multiple)
+    loc = np.full(n, -1, np.int64)
+    for o in owned:
+        loc[o] = np.arange(len(o))
+
+    ps, pd = part[src], part[dst]
+    same_round = (ps // group) == (pd // group)
+    dropped = int(np.sum(~same_round))
+
+    # kept edges per destination partition, in global edge order
+    kept = [np.flatnonzero((pd == p) & same_round) for p in range(n_parts)]
+    e_pad = _bucket(max(len(k) for k in kept), edge_multiple)
+
+    # boundary sets: needed[(q, p)] = sorted unique global nodes owned by
+    # q that p's kept edges read.  H is the single static halo width.
+    needed: dict[tuple[int, int], np.ndarray] = {}
+    halo_edges = 0
+    H = 0
+    for p in range(n_parts):
+        r = p // group
+        es, eps = src[kept[p]], ps[kept[p]]
+        for q in range(r * group, (r + 1) * group):
+            if q == p:
+                continue
+            u = np.unique(es[eps == q])
+            needed[(q, p)] = u
+            halo_edges += int(np.sum(eps == q))
+            H = max(H, len(u))
+
+    F = g.n_feats
+    feats = np.asarray(g.features)
+    labels = np.asarray(g.labels)
+    gcn_w = np.asarray(g.gcn_weight)
+    mean_w = np.asarray(g.mean_weight)
+    tr = np.asarray(g.train_mask)
+
+    o_feats = np.zeros((rounds, group, n_pad, F), np.float32)
+    o_labels = np.zeros((rounds, group, n_pad), np.int32)
+    o_train = np.zeros((rounds, group, n_pad), np.float32)
+    o_nmask = np.zeros((rounds, group, n_pad), np.float32)
+    o_esrc = np.zeros((rounds, group, e_pad), np.int32)
+    o_edst = np.zeros((rounds, group, e_pad), np.int32)
+    o_gw = np.zeros((rounds, group, e_pad), np.float32)
+    o_mw = np.zeros((rounds, group, e_pad), np.float32)
+    o_send = np.zeros((rounds, group, group, H), np.int32)
+    o_nreal = np.zeros((rounds, group), np.int32)
+    o_ereal = np.zeros((rounds, group), np.int32)
+
+    for p in range(n_parts):
+        r, j = divmod(p, group)
+        nodes = owned[p]
+        nl = len(nodes)
+        o_feats[r, j, :nl] = feats[nodes]
+        o_labels[r, j, :nl] = labels[nodes]
+        o_train[r, j, :nl] = tr[nodes].astype(np.float32)
+        o_nmask[r, j, :nl] = 1.0
+        o_nreal[r, j] = nl
+
+        e = kept[p]
+        el = len(e)
+        es, ed, eps = src[e], dst[e], ps[e]
+        s_loc = np.empty(el, np.int64)
+        local = eps == p
+        s_loc[local] = loc[es[local]]
+        for i in range(group):
+            q = r * group + i
+            if q == p:
+                continue
+            sel = eps == q
+            if not np.any(sel):
+                continue
+            # remote source u slots into the halo strip at the position u
+            # holds in the (sorted) boundary set q ships to p
+            s_loc[sel] = (n_pad + i * H
+                          + np.searchsorted(needed[(q, p)], es[sel]))
+        o_esrc[r, j, :el] = s_loc
+        o_edst[r, j, :el] = loc[ed]
+        o_gw[r, j, :el] = gcn_w[e]
+        o_mw[r, j, :el] = mean_w[e]
+        o_ereal[r, j] = el
+
+    # send maps: device i's rows for peer j are the boundary set of
+    # (q = r*m + i → p = r*m + j), zero-padded to H (pad slots gather row
+    # 0; the receiver's edges never index them)
+    for (q, p), u in needed.items():
+        r, i = divmod(q, group)
+        j = p % group
+        o_send[r, i, j, :len(u)] = loc[u]
+
+    return HaloProgram(
+        n_parts=n_parts, group=group, rounds=rounds, n_pad=n_pad,
+        e_pad=e_pad, halo=H, part=part, features=o_feats, labels=o_labels,
+        train_mask=o_train, node_mask=o_nmask, edge_src=o_esrc,
+        edge_dst=o_edst, gcn_weight=o_gw, mean_weight=o_mw, send_idx=o_send,
+        n_real_nodes=o_nreal, n_real_edges=o_ereal, dropped_edges=dropped,
+        halo_edges=halo_edges)
+
+
+def halo_exchange(h, send_idx, axis: str | None = "graph"):
+    """Ship boundary rows between the round's co-resident partitions.
+
+    ``h`` is this device's ``(n_pad, F)`` activation block inside a
+    ``shard_map`` over ``axis``; ``send_idx`` is its ``(m, H)`` gather map
+    (row ``i`` = the local rows peer ``i`` needs).  Returns the extended
+    ``(n_pad + m*H, F)`` block whose halo strip holds, at
+    ``n_pad + i*H + s``, row ``s`` of the boundary set partition ``i``
+    ships here — exactly where :func:`build_halo_program` pointed the
+    extended edge sources.
+
+    ``all_to_all(split_axis=0, concat_axis=0, tiled=True)`` sends chunk
+    ``i`` of the ``(m, H, F)`` send buffer to device ``i`` and concatenates
+    what everyone sent *here*, so on device ``j`` the received chunk ``i``
+    is ``h_i[send_idx_i[j]]``.  A pure permutation collective: its VJP is
+    the inverse all_to_all, and the gather's VJP is a scatter-add, so the
+    exchange is exactly differentiable.  ``H == 0`` (no cross-partition
+    edges) and ``axis is None`` (single-device lowering) are identities.
+    """
+    m, H = send_idx.shape
+    if H == 0 or axis is None or m == 1:
+        return h
+    f = h.shape[1]
+    sb = h[send_idx.reshape(-1)].reshape(m, H, f)
+    recv = jax.lax.all_to_all(sb, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    return jnp.concatenate([h, recv.reshape(m * H, f)], axis=0)
+
+
+def exchange_widths(arch: str, dims) -> tuple[int, ...]:
+    """Per-layer halo-exchange row widths.
+
+    GCN aggregates *after* the linear, so the exchanged tensor is the
+    biased pre-aggregation output (``d_out`` wide); SAGE aggregates the
+    layer *input*, so it exchanges ``h`` (``d_in`` wide).
+    """
+    dims = list(dims)
+    return tuple(dims[1:]) if arch == "gcn" else tuple(dims[:-1])
+
+
+def halo_bytes_per_epoch(prog: HaloProgram, widths) -> int:
+    """f32 bytes crossing the mesh per epoch (send side, all devices):
+    each of the ``m`` devices ships an ``(m, H, width)`` buffer per layer
+    per round."""
+    if prog.halo == 0:
+        return 0
+    per_layer = prog.group * prog.group * prog.halo * 4
+    return int(prog.rounds * per_layer * sum(widths))

@@ -78,3 +78,57 @@ def test_jnp_impl_equals_interp_impl_end_to_end():
         pa, za, ra = ops.quantize_packed(x, bits, 3, None, impl="jnp")
         pb, zb, rb = ops.quantize_packed(x, bits, 3, None, impl="interp")
         np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+# ------------------------------------------------- fused backward M-split
+def _np_tree(parts):
+    """The fixed-order pairwise reduction the kernel contract names."""
+    while parts.shape[0] > 1:
+        half = parts.shape[0] // 2
+        paired = parts[: 2 * half]
+        parts = np.concatenate([paired[0::2] + paired[1::2],
+                                parts[2 * half:]], axis=0)
+    return parts[0]
+
+
+@pytest.mark.parametrize("tile_rows,m", [(128, 384), (128, 256), (64, 320)])
+def test_fused_bwd_tiled_is_fixed_order_tree(tile_rows, m):
+    """Row-tiled fused backward == the fixed-order pairwise tree over
+    per-tile ``x̂ᵀ@g`` partials, exactly — including odd tile counts —
+    and is bit-stable across repeated runs."""
+    d, n, bits, g = 32, 128, 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float32)
+    gy = jax.random.normal(jax.random.PRNGKey(2), (m, n), jnp.float32)
+    p, z, r = ops.quantize_packed(x.reshape(-1, g), bits, 7, None,
+                                  impl="jnp")
+    x_hat = np.asarray(ops.dequantize_packed(
+        p, z, r, bits, g, None, impl="interp")).reshape(m, d)
+    k_tiles = m // tile_rows
+    parts = np.stack([
+        np.asarray(jnp.dot(jnp.asarray(x_hat[k * tile_rows:
+                                             (k + 1) * tile_rows]).T,
+                           gy[k * tile_rows:(k + 1) * tile_rows],
+                           preferred_element_type=jnp.float32))
+        for k in range(k_tiles)])
+    dw = ops.dequant_matmul_packed(p, z, r, gy, bits, g, d, None,
+                                   impl="interp", tile_rows=tile_rows)
+    np.testing.assert_array_equal(np.asarray(dw), _np_tree(parts))
+    dw2 = ops.dequant_matmul_packed(p, z, r, gy, bits, g, d, None,
+                                    impl="interp", tile_rows=tile_rows)
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw2))
+    # and the split accumulation stays float-close to the single-tile
+    # (bit-parity) order
+    dw_single = ops.dequant_matmul_packed(p, z, r, gy, bits, g, d, None,
+                                          impl="interp")
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_single),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tree_sum_orders():
+    from repro.kernels.fused_matmul import _tree_sum
+
+    for k in (1, 2, 3, 4, 5, 8):
+        parts = jax.random.normal(jax.random.PRNGKey(k), (k, 8, 16),
+                                  jnp.float32)
+        np.testing.assert_array_equal(np.asarray(_tree_sum(parts)),
+                                      _np_tree(np.asarray(parts)))
