@@ -18,6 +18,15 @@ _M2 = np.uint32(0xC2B2_AE35)
 _GOLDEN = np.uint32(0x9E37_79B9)
 _RADEMACHER_SALT = np.uint32(0x517C_C1B7)
 
+#: Knuth's 32-bit multiplicative-hash constant (⌊2³²/φ⌋, odd).  The single
+#: home for every derived-stream multiply outside the murmur3 mix above:
+#: autoprec probe seeds and the LM per-step activation seed
+#: (:mod:`repro.engine.seeds`) and the offload callback-store tickets
+#: (:mod:`repro.offload.engine`) all hash through this constant.  It lives
+#: here — not in ``engine.seeds`` — because ``repro.offload`` must not
+#: import the engine package (``engine.plan`` imports ``offload.engine``).
+KNUTH_MULT = np.uint32(2654435761)
+
 
 def hash_u32(x: jnp.ndarray) -> jnp.ndarray:
     """murmur3 fmix32 over a uint32 array."""

@@ -39,10 +39,6 @@ def uniform_levels(bits: int) -> jnp.ndarray:
     return jnp.arange(2**bits, dtype=jnp.float32)
 
 
-def num_levels(bits: int) -> int:
-    return 2**bits
-
-
 def group_reshape(x: jnp.ndarray, group_size: int) -> tuple[jnp.ndarray, int]:
     """Flatten ``x`` and regroup into (n_blocks, group_size) (paper Eq. 6).
 

@@ -68,29 +68,39 @@ class SamplingPolicy:
     grad_accum: int = 1
 
     def __post_init__(self):
+        # Validation errors name the offending field as ``policy.field=value``
+        # so callers (and repro.staticcheck.plan_verify, which re-raises
+        # these messages as findings) can point at the exact knob to fix.
         if self.kind not in SAMPLING_KINDS:
-            raise ValueError(f"sampling kind {self.kind!r} not in "
+            raise ValueError(f"sampling.kind={self.kind!r} not in "
                              f"{SAMPLING_KINDS}")
         if self.n_parts < 1:
-            raise ValueError(f"n_parts={self.n_parts} must be >= 1")
+            raise ValueError(f"sampling.n_parts={self.n_parts} must be >= 1")
         if self.grad_accum < 1:
-            raise ValueError(f"grad_accum={self.grad_accum} must be >= 1")
+            raise ValueError(f"sampling.grad_accum={self.grad_accum} "
+                             "must be >= 1")
         if self.kind == "full" and self.n_parts != 1:
-            raise ValueError("full-graph sampling is incompatible with "
-                             f"n_parts={self.n_parts}")
+            raise ValueError(f"sampling.n_parts={self.n_parts} is "
+                             "incompatible with sampling.kind='full' "
+                             "(full-graph sampling has exactly one "
+                             "partition)")
         if self.kind == "mesh":
             if self.grad_accum != 1:
-                raise ValueError("mesh sampling runs one update per round; "
-                                 f"grad_accum={self.grad_accum} needs "
-                                 "kind='partition'")
+                raise ValueError(f"sampling.grad_accum={self.grad_accum} is "
+                                 "incompatible with sampling.kind='mesh' "
+                                 "(mesh rounds run one update each; "
+                                 "grad_accum needs kind='partition')")
             if self.halo != 0:
-                raise ValueError("mesh halo context is structural (the "
-                                 "per-layer exchange); the sampling halo "
-                                 "knob applies to kind='partition' only")
+                raise ValueError(f"sampling.halo={self.halo} is incompatible "
+                                 "with sampling.kind='mesh' (mesh halo "
+                                 "context is structural — the per-layer "
+                                 "exchange; the sampling halo knob applies "
+                                 "to kind='partition' only)")
             if self.renormalize:
-                raise ValueError("mesh sampling slices full-graph "
-                                 "aggregation weights; renormalize needs "
-                                 "kind='partition'")
+                raise ValueError("sampling.renormalize=True is incompatible "
+                                 "with sampling.kind='mesh' (mesh slices "
+                                 "full-graph aggregation weights; "
+                                 "renormalize needs kind='partition')")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,12 +119,15 @@ class PrecisionPolicy:
 
     def __post_init__(self):
         if self.kind not in PRECISION_KINDS:
-            raise ValueError(f"precision kind {self.kind!r} not in "
+            raise ValueError(f"precision.kind={self.kind!r} not in "
                              f"{PRECISION_KINDS}")
         if self.kind == "autoprec" and self.bit_budget is None:
-            raise ValueError("autoprec precision needs a bit_budget")
+            raise ValueError("precision.bit_budget=None is incompatible "
+                             "with precision.kind='autoprec' (autoprec "
+                             "needs a bits-per-element budget)")
         if self.kind == "fixed" and self.bit_budget is not None:
-            raise ValueError("fixed precision does not take a bit_budget "
+            raise ValueError(f"precision.bit_budget={self.bit_budget} is "
+                             "incompatible with precision.kind='fixed' "
                              "(use kind='autoprec')")
 
 
@@ -134,14 +147,16 @@ class StashPolicy:
 
     def __post_init__(self):
         if self.kind not in STASH_KINDS:
-            raise ValueError(f"stash kind {self.kind!r} not in {STASH_KINDS}")
+            raise ValueError(f"stash.kind={self.kind!r} not in "
+                             f"{STASH_KINDS}")
         if self.placement not in STASH_PLACEMENTS:
-            raise ValueError(f"offload={self.placement!r} not in "
-                             f"{STASH_PLACEMENTS}")
+            raise ValueError(f"stash.placement={self.placement!r} (the "
+                             f"offload= policy) not in {STASH_PLACEMENTS}")
         if self.kind == "tensor" and self.placement != "device":
-            raise ValueError("per-tensor stashes are device-resident; "
-                             f"placement={self.placement!r} needs "
-                             "kind='arena'")
+            raise ValueError(f"stash.placement={self.placement!r} is "
+                             "incompatible with stash.kind='tensor' "
+                             "(per-tensor stashes are device-resident; "
+                             "pooled placements need kind='arena')")
 
     @property
     def offload(self) -> str | None:
@@ -170,9 +185,11 @@ class KernelPolicy:
 
     def __post_init__(self):
         if self.impl is not None and self.impl not in VALID_IMPLS:
-            raise ValueError(f"impl={self.impl!r} not in {VALID_IMPLS}")
+            raise ValueError(f"kernel.impl={self.impl!r} not in "
+                             f"{VALID_IMPLS}")
         if self.fused not in VALID_FUSED:
-            raise ValueError(f"fused={self.fused!r} not in {VALID_FUSED}")
+            raise ValueError(f"kernel.fused={self.fused!r} not in "
+                             f"{VALID_FUSED}")
 
     def apply(self, cfg):
         """Reroute a GNNConfig's compression stack onto this backend."""

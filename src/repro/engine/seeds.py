@@ -26,6 +26,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.prng import KNUTH_MULT
+
 #: Base multiplier of the update-ordinal seed scheme: ``(o + 1) * 7919``.
 SR_SEED_PRIME = 7919
 
@@ -35,8 +37,10 @@ LAYER_SEED_STRIDE = 1013
 #: Salt for the batch-order shuffle rng of the mini-batch engine.
 ORDER_SALT = 0x5EED_BA5E
 
-#: Knuth multiplicative hash used to derive autoprec probe seeds.
-_PROBE_MULT = 2654435761
+#: Knuth multiplicative hash used to derive autoprec probe seeds and the
+#: LM per-step activation seed (shared with the offload ticket hash via
+#: :data:`repro.core.prng.KNUTH_MULT`).
+_PROBE_MULT = int(KNUTH_MULT)
 
 
 def sr_seed(ordinal):
@@ -64,6 +68,16 @@ def batch_ordinals(epoch, n_batches: int, update, group: int, micro, dp: int):
     """
     base = epoch * n_batches + update * group
     return base + micro * dp + jnp.arange(dp)
+
+
+def step_seed(step):
+    """Activation-compression base seed for one LM optimizer step.
+
+    The transformer training step has no epoch/partition structure, so its
+    stream is the Knuth hash of the step counter (``step`` may be a traced
+    scalar — the optimizer state's step count inside a jitted train step).
+    """
+    return jnp.asarray(step).astype(jnp.uint32) * jnp.uint32(KNUTH_MULT)
 
 
 def probe_seeds(seed: int):

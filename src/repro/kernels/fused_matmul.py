@@ -99,12 +99,6 @@ def _matmul_quant_kernel(seed_ref, x_ref, w_ref, y_ref, packed_ref,
         rng_ref[...] = rng
 
 
-def _matmul_kernel(x_ref, w_ref, y_ref):
-    y_ref[...] = jnp.dot(x_ref[...].astype(jnp.float32),
-                         w_ref[...].astype(jnp.float32),
-                         preferred_element_type=jnp.float32)
-
-
 def _build_matmul_quant(m, d, n, bits, group_size, levels, tm, tn,
                         interpret):
     assert m % tm == 0 and n % tn == 0, (m, n, tm, tn)
@@ -157,27 +151,6 @@ def matmul_quant_call(x2d, w, bits: int, seed, levels=None, *,
     call = _build_matmul_quant(m, d, n, bits, group_size,
                                levels, tm, tn, interpret)
     return call(seed_arr, x2d, w)
-
-
-def matmul_call(x2d, w, *, tm: int = 128, tn: int = 128,
-                interpret: bool = False):
-    """Plain tiled matmul kernel — the unfused comparator the benchmarks
-    time against (same machinery as the fused kernel, minus the epilogue),
-    so fused-vs-unfused measures exactly the fusion win."""
-    m, d = x2d.shape
-    n = w.shape[1]
-    assert m % tm == 0 and n % tn == 0, (m, n, tm, tn)
-    return pl.pallas_call(
-        _matmul_kernel,
-        grid=(m // tm, n // tn),
-        in_specs=[
-            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((d, tn), lambda i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
-    )(x2d, w)
 
 
 def _dequant_matmul_kernel(packed_ref, zero_ref, rng_ref, g_ref, dw_ref,

@@ -45,16 +45,6 @@ def _arrays(shape_str: str):
             for d, dims in _ARR_RE.findall(shape_str)]
 
 
-def _bytes_of(shape_str: str) -> int:
-    total = 0
-    for bsz, dims in _arrays(shape_str):
-        n = 1
-        for d in dims:
-            n *= d
-        total += n * bsz
-    return total
-
-
 def _elems_first_array(shape_str: str):
     arrs = _arrays(shape_str)
     if not arrs:

@@ -34,6 +34,7 @@ def _stash_prompt_context(params, prompts, policy: str) -> dict:
     end-to-end outside the training engines.
     """
     from repro.core.compressor import CompressionConfig, compress, decompress
+    from repro.engine.seeds import sr_seed
     from repro.offload import arena, engine
 
     h0 = jnp.take(params["embed"], jnp.asarray(prompts),
@@ -41,7 +42,7 @@ def _stash_prompt_context(params, prompts, policy: str) -> dict:
     comp = CompressionConfig(bits=2, group_size=256)
     plan = arena.plan_stashes((tuple(h0.shape),), (comp,))
     writer = engine.make_writer(plan, policy, jnp.uint32(0x5E12))
-    writer.put_ct(0, compress(h0, comp, jnp.uint32(7919)))
+    writer.put_ct(0, compress(h0, comp, sr_seed(0)))
     reader = engine.make_reader(plan, policy, writer.residual())
     reader.prefetch(0)
     h_rec = decompress(reader.get_ct(0))

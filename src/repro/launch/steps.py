@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backend
+from repro.engine.seeds import step_seed
 from repro.models import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
@@ -26,7 +27,7 @@ def make_train_step(model: Model, opt: AdamWConfig,
                 params, mb["tokens"],
                 prefix_embeds=mb.get("prefix_embeds"),
                 enc_embeds=mb.get("enc_embeds"),
-                act_seed=step.astype(jnp.uint32) * jnp.uint32(2654435761),
+                act_seed=step_seed(step),
                 vocab_chunk=cfg.vocab_chunk)
 
     def train_step(params, opt_state, batch):

@@ -1,4 +1,4 @@
 """LM substrate: transformer / MoE / SSM / hybrid / enc-dec model zoo."""
-from repro.models.transformer import Model, init_model
+from repro.models.transformer import Model
 
-__all__ = ["Model", "init_model"]
+__all__ = ["Model"]

@@ -12,14 +12,6 @@ def rmsnorm(x, w, eps: float = 1e-6):
     return (x32 * inv * w).astype(x.dtype)
 
 
-def layernorm(x, w, b, eps: float = 1e-5):
-    x32 = x.astype(jnp.float32)
-    mu = jnp.mean(x32, axis=-1, keepdims=True)
-    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
-    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
-    return (y * w + b).astype(x.dtype)
-
-
 def rope_freqs(d_head: int, theta: float) -> np.ndarray:
     return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
 
@@ -42,10 +34,6 @@ def swiglu(x, w_gate, w_up, w_down):
     if h.ndim == 3:
         h = shard(h, "batch", None, "dff")
     return h @ w_down
-
-
-def gelu_mlp(x, w_in, b_in, w_out, b_out):
-    return jax.nn.gelu(x @ w_in + b_in, approximate=True) @ w_out + b_out
 
 
 def dense_init(key, d_in, d_out, dtype=jnp.bfloat16, scale=None):

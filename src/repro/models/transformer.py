@@ -644,7 +644,3 @@ class Model:
         h = rmsnorm(h, params["final_norm"])
         return (h @ params["lm_head"]).astype(jnp.float32), cache
 
-
-def init_model(key, cfg):
-    m = Model(cfg)
-    return m, m.init(key)

@@ -23,8 +23,7 @@ allocator-visible savings:
 * :mod:`repro.offload.gnn` — the GNN stash planner
   (:func:`plan_gnn_stashes`).  The whole-forward ``custom_vjp`` that
   consumes the plan lives in :mod:`repro.engine.forward`, where arenas
-  are one stash policy among several; this package still re-exports the
-  legacy ``arena_gnn_forward`` spelling.
+  are one stash policy among several.
 
 Entry points: an arena :class:`~repro.engine.plan.StashPolicy` on any
 ``ExecutionPlan`` (legacy ``train_gnn(offload=...)`` /
@@ -41,7 +40,7 @@ from repro.offload.engine import (POLICIES, check_policy,
                                   fetch_compressed, host_memory_kind,
                                   host_store_bytes, make_reader, make_writer,
                                   measure_live_bytes, offload_compressed)
-from repro.offload.gnn import arena_gnn_forward, plan_gnn_stashes
+from repro.offload.gnn import plan_gnn_stashes
 from repro.offload.pager import FeaturePager
 
 __all__ = [
@@ -52,5 +51,5 @@ __all__ = [
     "make_reader", "measure_live_bytes", "host_store_bytes",
     "device_resident_stash_bytes", "device_memory_stats",
     "offload_compressed", "fetch_compressed",
-    "arena_gnn_forward", "plan_gnn_stashes", "FeaturePager",
+    "plan_gnn_stashes", "FeaturePager",
 ]

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import backend
 from repro.core.compressor import CompressedTensor, CompressionConfig
+from repro.core.prng import KNUTH_MULT
 from repro.offload import arena as ar
 
 POLICIES = ("device", "host", "pinned-paged")
@@ -131,7 +132,7 @@ def host_store_clear() -> None:
 
 
 def _ticket_of(key: int, tag: int) -> np.uint32:
-    return np.uint32((int(key) ^ (tag * 2654435761)) & 0xFFFF_FFFF)
+    return np.uint32((int(key) ^ (tag * int(KNUTH_MULT))) & 0xFFFF_FFFF)
 
 
 def host_put(key, ticket, tag: int, arrays, n_reads: int = 1):

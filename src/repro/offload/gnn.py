@@ -1,11 +1,10 @@
-"""GNN stash planning (and the legacy home of the arena-routed forward).
+"""GNN stash planning.
 
 :func:`plan_gnn_stashes` — the static arena layout for one GNN forward —
 lives here with the rest of the offload subsystem.  The whole-network
-``custom_vjp`` that *consumes* the plan moved to
+``custom_vjp`` that *consumes* the plan lives in
 :mod:`repro.engine.forward`, where it serves every stash policy
-(per-tensor included), not just arenas; :func:`arena_gnn_forward` remains
-as a lazy re-export so pre-engine imports keep working.
+(per-tensor included), not just arenas.
 """
 from __future__ import annotations
 
@@ -34,13 +33,3 @@ def plan_gnn_stashes(cfg, in_dim: int, n_nodes: int) -> StashPlan:
         masks.append(n_nodes * d_out if li < len(dims) - 2 else 0)
     return plan_stashes(tuple(shapes), per_layer, tuple(masks))
 
-
-def arena_gnn_forward(params, graph, cfg, plan: StashPlan, seed=0,
-                      node_mask=None, policy: str = "device"):
-    """Pre-engine spelling of the arena-routed forward; the implementation
-    is :func:`repro.engine.forward.arena_gnn_forward` (imported lazily —
-    the engine package imports this module at load time)."""
-    from repro.engine.forward import arena_gnn_forward as fwd
-
-    return fwd(params, graph, cfg, plan, seed=seed, node_mask=node_mask,
-               policy=policy)

@@ -21,11 +21,6 @@ def set_rules(**mapping):
     _RULES = dict(mapping)
 
 
-def clear_rules():
-    global _RULES
-    _RULES = {}
-
-
 def rules_for(cfg, mesh, per_step_batch: int, *, is_train: bool = True):
     """Standard rule set for an ArchConfig on a mesh (DESIGN.md §6).
 

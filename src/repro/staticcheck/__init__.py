@@ -1,0 +1,24 @@
+"""repro.staticcheck — compression-invariant static analysis.
+
+Four gating passes (``python -m repro.staticcheck``) plus an opt-in
+dead-code sweep:
+
+* :mod:`~repro.staticcheck.jaxpr_audit` — trace every plan in the
+  representative matrix to a closed jaxpr and prove no activation bytes
+  reach HBM outside the :class:`~repro.offload.arena.StashPlan`, with a
+  byte ledger cross-checked against ``activation_memory_report``;
+* :mod:`~repro.staticcheck.plan_verify` — symbolic ExecutionPlan × graph
+  × arch feasibility (policy fields, cross-policy combinations, layer
+  bit-alignment, arena segment bounds/overlap) without compiling;
+* :mod:`~repro.staticcheck.kernel_contracts` — declarative pre/post
+  conditions for ``fused_matmul`` / ``quant_blockwise`` / ``rp_matmul``
+  over every persisted autotune-cache entry;
+* :mod:`~repro.staticcheck.seed_lint` — AST lint for seed/RNG discipline
+  (raw scheme constants, ad-hoc PRNGKey arithmetic, host nondeterminism
+  in jitted code, SR-stream reuse);
+* :mod:`~repro.staticcheck.deadcode` — unused-symbol sweep
+  (``--dead-code``).
+"""
+from repro.staticcheck.findings import Finding, load_baseline, new_findings
+
+__all__ = ["Finding", "load_baseline", "new_findings"]

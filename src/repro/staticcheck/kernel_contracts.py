@@ -1,0 +1,255 @@
+"""Declarative pre/post-conditions for the compression kernels, evaluated
+against every persisted autotune entry.
+
+Each :class:`Contract` states one invariant the Pallas kernels assume and
+checks it over a parsed ``results/autotune/fused_tiles.json`` entry
+(``{kind}/{m}x{d}x{n}/b{bits}/g{group}/{backend}`` → ``(t0, t1)`` tiles):
+
+* ``fused_matmul`` forward — the row tile owns whole quantization blocks
+  (``tm % row_tile_step(d, G) == 0``, the same legality
+  :func:`repro.kernels.autotune.fwd_candidates` enumerates), tiles stay
+  inside the (step-padded) operand, and the tile working set fits the
+  per-core VMEM budget;
+* ``fused_matmul`` backward — the row tile divides ``m`` exactly (the
+  fixed-order tree reduction needs equal splits) and owns whole blocks;
+  the single-tile ``tile_rows == m`` configuration is VMEM-exempt by
+  design (it is the bit-exact fallback, never auto-picked over budget);
+* ``quant_blockwise`` — the base kernel preconditions (bits divides 32,
+  the pack width divides the group, VM level tables fit the unrolled
+  compare/select chain), via the one predicate the dispatch layer routes
+  on (:func:`repro.core.backend.quant_kernel_unsupported`);
+* ``rp_matmul`` — the projection ratio divides the stash width
+  (``compress`` asserts this at trace time; off-grid tile shapes are an
+  allowed jnp fallback, not a violation).
+
+A cache entry violating a contract means the autotuner persisted tiles a
+kernel launch would miscompute or OOM on — exactly the class of bug that
+only surfaces on real TPU hardware otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Callable
+
+from repro.core import backend
+from repro.kernels.autotune import VMEM_BUDGET, cache_path, row_tile_step
+from repro.staticcheck.findings import Finding
+
+PASS = "kernel-contracts"
+
+_KEY_RE = re.compile(
+    r"^(?P<kind>fwd|bwd)/(?P<m>\d+)x(?P<d>\d+)x(?P<n>\d+)"
+    r"/b(?P<bits>\d+)/g(?P<group>\d+)/(?P<backend>[\w-]+)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    """One parsed autotune-cache row."""
+
+    key: str
+    kind: str
+    m: int
+    d: int
+    n: int
+    bits: int
+    group_size: int
+    backend: str
+    t0: int  # tm (fwd) | tile_rows (bwd)
+    t1: int  # tn
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    rule: str
+    description: str
+    applies: str                       # "fwd" | "bwd" | "any"
+    check: Callable[[Entry], str | None]  # violation message, or None
+
+
+def _fwd_vmem(e: Entry) -> int:
+    return 4 * (e.t0 * e.d + e.d * e.t1 + e.t0 * e.t1 + e.t0 * e.d // 8)
+
+
+def _bwd_vmem(e: Entry) -> int:
+    return 4 * (e.t0 * e.d + e.t0 * e.t1 + e.d * e.t1 + e.t0 * e.d // 8)
+
+
+def _tile_positive(e: Entry) -> str | None:
+    if e.t0 < 1 or e.t1 < 1:
+        return f"non-positive tile ({e.t0}, {e.t1})"
+    return None
+
+
+def _quant_precondition(e: Entry) -> str | None:
+    return backend.quant_kernel_unsupported(e.bits, e.group_size, None)
+
+
+def _fwd_block_alignment(e: Entry) -> str | None:
+    step = row_tile_step(e.d, e.group_size)
+    if e.t0 % step:
+        return (f"row tile tm={e.t0} does not own whole quantization "
+                f"blocks: need a multiple of step={step} "
+                f"(G={e.group_size}, D={e.d})")
+    return None
+
+
+def _fwd_index_bounds(e: Entry) -> str | None:
+    step = row_tile_step(e.d, e.group_size)
+    m_pad = -(-e.m // step) * step
+    if e.t0 > m_pad:
+        return (f"row tile tm={e.t0} exceeds the step-padded operand "
+                f"height {m_pad} (m={e.m}, step={step})")
+    if e.t1 > e.n:
+        return f"column tile tn={e.t1} exceeds the output width n={e.n}"
+    return None
+
+
+def _fwd_vmem_budget(e: Entry) -> str | None:
+    vmem = _fwd_vmem(e)
+    if vmem > VMEM_BUDGET:
+        return (f"tile ({e.t0}, {e.t1}) needs {vmem} bytes of VMEM "
+                f"({e.t0}x{e.d} operand + {e.d}x{e.t1} weights + "
+                f"{e.t0}x{e.t1} output + packed epilogue) over the "
+                f"{VMEM_BUDGET}-byte per-core budget")
+    return None
+
+
+def _bwd_block_alignment(e: Entry) -> str | None:
+    step = row_tile_step(e.d, e.group_size)
+    if e.t0 % step:
+        return (f"row tile tile_rows={e.t0} does not own whole "
+                f"quantization blocks: need a multiple of step={step}")
+    if e.m % e.t0:
+        return (f"tile_rows={e.t0} does not divide m={e.m}: the M-split "
+                "tree reduction needs equal row splits")
+    return None
+
+
+def _bwd_index_bounds(e: Entry) -> str | None:
+    if e.t0 > e.m:
+        return f"tile_rows={e.t0} exceeds the operand height m={e.m}"
+    if e.t1 > e.n:
+        return f"column tile tn={e.t1} exceeds the output width n={e.n}"
+    return None
+
+
+def _bwd_vmem_budget(e: Entry) -> str | None:
+    if e.t0 == e.m:
+        return None  # the bit-exact single-tile config is budget-exempt
+    vmem = _bwd_vmem(e)
+    if vmem > VMEM_BUDGET:
+        return (f"row-split tile ({e.t0}, {e.t1}) needs {vmem} bytes of "
+                f"VMEM over the {VMEM_BUDGET}-byte per-core budget")
+    return None
+
+
+CONTRACTS: tuple[Contract, ...] = (
+    Contract("tile-bounds", "tiles are positive", "any", _tile_positive),
+    Contract("quant-precondition",
+             "base quant kernel can run (bits | 32, pack width | G)",
+             "any", _quant_precondition),
+    Contract("tile-block-alignment",
+             "fwd row tile owns whole quantization blocks",
+             "fwd", _fwd_block_alignment),
+    Contract("tile-bounds", "fwd tiles stay inside the padded operand",
+             "fwd", _fwd_index_bounds),
+    Contract("vmem-budget", "fwd tile working set fits VMEM",
+             "fwd", _fwd_vmem_budget),
+    Contract("tile-block-alignment",
+             "bwd row tile owns whole blocks and divides m exactly",
+             "bwd", _bwd_block_alignment),
+    Contract("tile-bounds", "bwd tiles stay inside the operand",
+             "bwd", _bwd_index_bounds),
+    Contract("vmem-budget",
+             "bwd row-split tile fits VMEM (tile_rows == m exempt)",
+             "bwd", _bwd_vmem_budget),
+)
+
+
+def parse_entry(key: str, tiles) -> Entry | None:
+    m = _KEY_RE.match(key)
+    if m is None or not (isinstance(tiles, (list, tuple))
+                         and len(tiles) == 2):
+        return None
+    return Entry(key=key, kind=m["kind"], m=int(m["m"]), d=int(m["d"]),
+                 n=int(m["n"]), bits=int(m["bits"]),
+                 group_size=int(m["group"]), backend=m["backend"],
+                 t0=int(tiles[0]), t1=int(tiles[1]))
+
+
+def check_entry(key: str, tiles) -> list[Finding]:
+    e = parse_entry(key, tiles)
+    if e is None:
+        return [Finding(PASS, "cache-key", key,
+                        f"unparseable autotune entry (tiles={tiles!r}); "
+                        "expected kind/MxDxN/bBITS/gGROUP/backend -> "
+                        "[t0, t1]")]
+    out = []
+    for c in CONTRACTS:
+        if c.applies not in ("any", e.kind):
+            continue
+        msg = c.check(e)
+        if msg is not None:
+            out.append(Finding(PASS, c.rule, key, msg))
+    return out
+
+
+def check_autotune_cache(path: pathlib.Path | None = None) -> list[Finding]:
+    """Evaluate every contract against every persisted cache entry."""
+    p = pathlib.Path(path) if path is not None else cache_path()
+    if not p.exists():
+        return []
+    try:
+        cache = json.loads(p.read_text())
+    except (ValueError, OSError) as e:
+        return [Finding(PASS, "cache-key", str(p),
+                        f"autotune cache is not valid JSON: {e}")]
+    out = []
+    for key in sorted(cache):
+        out.extend(check_entry(key, cache[key]))
+    return out
+
+
+def check_compression_config(cfg, stash_width: int,
+                             where: str) -> list[Finding]:
+    """quant_blockwise / rp_matmul preconditions for one layer config."""
+    out = []
+    reason = backend.quant_kernel_unsupported(cfg.bits, cfg.group_size,
+                                              cfg.levels())
+    if reason is not None:
+        out.append(Finding(PASS, "quant-precondition", where, reason))
+    if cfg.rp_ratio > 1 and stash_width % cfg.rp_ratio:
+        out.append(Finding(
+            PASS, "rp-precondition", where,
+            f"rp_matmul projects the last dim {stash_width} by "
+            f"rp_ratio={cfg.rp_ratio}, which does not divide it"))
+    return out
+
+
+def check_matrix_configs() -> list[Finding]:
+    """Every (layer config × stash width) the plan matrix would launch."""
+    from repro.graph.models import _dims
+    from repro.staticcheck.matrix import audit_matrix
+
+    out, seen = [], set()
+    for case in audit_matrix():
+        dims = _dims(case.cfg, case.in_dim)
+        for li, (d_in, comp) in enumerate(
+                zip(dims[:-1], case.cfg.layer_compression())):
+            if comp is None:
+                continue
+            lin_in = d_in * (2 if case.cfg.arch == "sage" else 1)
+            sig = (comp, lin_in)
+            if sig in seen:
+                continue
+            seen.add(sig)
+            out.extend(check_compression_config(
+                comp, lin_in, f"{case.key}/layer{li}"))
+    return out
+
+
+def run(path: pathlib.Path | None = None) -> list[Finding]:
+    return check_autotune_cache(path) + check_matrix_configs()

@@ -1,0 +1,240 @@
+"""Symbolic plan/arena verifier: ExecutionPlan × graph × arch checks that
+need no compilation.
+
+Four layers of checks, all pure arithmetic over static plan state:
+
+* **policy fields** — re-raise the engine dataclasses' own validation
+  (:mod:`repro.engine.plan` names the offending ``policy.field=value`` in
+  every message; :func:`verify_legacy_kwargs` surfaces them as findings);
+* **cross-policy combinations** — the constraints
+  :mod:`repro.engine.compile` enforces at compile time (mesh × arena,
+  mesh × autoprec, mesh × fused='on', host offload under data
+  parallelism, whole update groups, mesh divisors), checked here without
+  building a single batch;
+* **per-layer feasibility** — bit-width/word-alignment of every layer's
+  quantization config (autoprec mixed-bit tuples included), RP
+  divisibility, and ``fused='on'`` eligibility via the same
+  :mod:`repro.core.backend` predicates the dispatch layer routes on;
+* **arena layout** — every :class:`~repro.offload.arena.StashPlan`
+  segment proven in-bounds and non-overlapping, its geometry re-derived
+  and compared (ragged 1-bit mask tails must be word-aligned *ceil* — the
+  historical ``// 8`` floor bug class).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import backend
+from repro.core import pack as packmod
+from repro.engine.plan import ExecutionPlan
+from repro.offload.arena import StashPlan, _stash_geometry
+from repro.staticcheck.findings import Finding
+
+PASS = "plan-verify"
+
+
+def verify_legacy_kwargs(where: str = "kwargs", **kwargs) -> list[Finding]:
+    """Validate a legacy kwarg spelling by building its plan; the policy
+    dataclasses' field-named messages become the findings verbatim."""
+    try:
+        ExecutionPlan.from_legacy(**kwargs)
+    except (ValueError, TypeError) as e:
+        return [Finding(PASS, "policy-field", where, str(e))]
+    return []
+
+
+def _largest_mesh_divisor(n_parts: int, devices: int) -> int:
+    """Mirror of :func:`repro.parallel.halo.graph_mesh`'s axis sizing:
+    the largest divisor of ``n_parts`` not exceeding the device count."""
+    return max(d for d in range(1, max(devices, 1) + 1) if n_parts % d == 0)
+
+
+def verify_combination(plan: ExecutionPlan, *, devices: int = 1,
+                       where: str = "plan") -> list[Finding]:
+    """The cross-policy rules ``compile_plan`` would reject at runtime."""
+    out = []
+    sp = plan.sampling
+
+    def bad(rule, msg):
+        out.append(Finding(PASS, rule, where, msg))
+
+    if sp.kind == "mesh":
+        if plan.stash.kind != "tensor":
+            bad("mesh-stash",
+                f"stash.kind={plan.stash.kind!r} is incompatible with "
+                "sampling.kind='mesh' (mesh devices stash per-tensor "
+                "residuals; the features are what is host-resident)")
+        if plan.precision.kind != "fixed":
+            bad("mesh-precision",
+                f"precision.kind={plan.precision.kind!r} is incompatible "
+                "with sampling.kind='mesh' (calibrate autoprec on a "
+                "partition plan and pass the allocated cfg)")
+        if plan.kernel.fused == "on":
+            bad("mesh-fused",
+                "kernel.fused='on' is incompatible with "
+                "sampling.kind='mesh' (the mesh forward composes the "
+                "per-op stack; use 'auto'/'off')")
+        m = _largest_mesh_divisor(sp.n_parts, devices)
+        if devices > 1 and sp.n_parts > 1 and m == 1:
+            bad("mesh-divisor",
+                f"sampling.n_parts={sp.n_parts} shares no divisor with "
+                f"the {devices}-device mesh: the graph axis degenerates "
+                "to m=1 (sequential rounds, no mesh parallelism)")
+    if sp.kind == "partition":
+        group = max(devices, 1) * sp.grad_accum
+        if sp.n_parts % group:
+            bad("update-group",
+                f"sampling.n_parts={sp.n_parts} must be a multiple of "
+                f"dp*grad_accum={devices}*{sp.grad_accum}={group} "
+                "(whole update groups per epoch)")
+        if plan.stash.offload in ("host", "pinned-paged") and devices > 1:
+            bad("offload-dp",
+                f"stash.placement={plan.stash.placement!r} needs an "
+                f"unsharded run (dp_size==1); got dp={devices}")
+    return out
+
+
+def verify_layers(plan: ExecutionPlan, cfg, in_dim: int, live_nodes: int,
+                  where: str = "plan") -> list[Finding]:
+    """Bit-width / alignment / fused-eligibility feasibility per layer."""
+    from repro.graph.models import _dims
+
+    out = []
+    try:
+        per = cfg.layer_compression()
+    except ValueError as e:
+        return [Finding(PASS, "layer-widths", where, str(e))]
+    dims = _dims(cfg, in_dim)
+    for li, (d_in, comp) in enumerate(zip(dims[:-1], per)):
+        if comp is None:
+            continue
+        lin_in = d_in * (2 if cfg.arch == "sage" else 1)
+        lwhere = f"{where}/layer{li}"
+        reason = backend.quant_kernel_unsupported(comp.bits, comp.group_size,
+                                                 comp.levels())
+        if reason is not None:
+            out.append(Finding(PASS, "bit-alignment", lwhere, reason))
+        if comp.rp_ratio > 1 and lin_in % comp.rp_ratio:
+            out.append(Finding(
+                PASS, "rp-divisibility", lwhere,
+                f"stash width {lin_in} is not divisible by "
+                f"rp_ratio={comp.rp_ratio} (compress would assert)"))
+        if plan.kernel.fused == "on":
+            reason = backend.fused_unsupported((live_nodes, lin_in),
+                                               comp.bits, comp.group_size,
+                                               comp.levels())
+            if reason is None and comp.rp_ratio > 1:
+                reason = (f"rp_ratio={comp.rp_ratio} projects before "
+                          "quantization; the fused epilogue quantizes the "
+                          "matmul operand itself")
+            if reason is not None:
+                out.append(Finding(
+                    PASS, "fused-eligibility", lwhere,
+                    f"kernel.fused='on' cannot run this layer: {reason}"))
+    return out
+
+
+def verify_stash_plan(splan: StashPlan,
+                      where: str = "stash-plan") -> list[Finding]:
+    """Prove every arena segment in-bounds, non-overlapping, and sized to
+    its re-derived geometry."""
+    out = []
+    spans: dict[str, list[tuple[int, int, str]]] = {"u32": [], "f32": []}
+    limits = {"u32": splan.u32_words, "f32": splan.f32_elems}
+    for lp in splan.layers:
+        lwhere = f"{where}/layer{lp.index}"
+        for name, seg in (("packed", lp.packed), ("rp_seed", lp.rp_seed),
+                          ("zero", lp.zero), ("rng", lp.rng),
+                          ("raw", lp.raw), ("mask", lp.mask)):
+            if seg is None:
+                continue
+            swhere = f"{lwhere}/{name}"
+            if seg.arena not in spans:
+                out.append(Finding(PASS, "arena-bounds", swhere,
+                                   f"unknown arena {seg.arena!r}"))
+                continue
+            if seg.offset < 0 or seg.offset + seg.size > limits[seg.arena]:
+                out.append(Finding(
+                    PASS, "arena-bounds", swhere,
+                    f"[{seg.offset}, {seg.offset + seg.size}) lies outside "
+                    f"the {limits[seg.arena]}-word {seg.arena} arena"))
+            spans[seg.arena].append(
+                (seg.offset, seg.offset + seg.size, swhere))
+        if lp.cfg is not None:
+            try:
+                proj_shape, n_blocks, wpb = _stash_geometry(lp.shape, lp.cfg)
+            except AssertionError as e:
+                out.append(Finding(PASS, "rp-divisibility", lwhere, str(e)))
+                continue
+            if (lp.proj_shape, lp.n_blocks, lp.words_per_block) != \
+                    (proj_shape, n_blocks, wpb):
+                out.append(Finding(
+                    PASS, "arena-geometry", lwhere,
+                    f"planned geometry (proj={lp.proj_shape}, "
+                    f"blocks={lp.n_blocks}x{lp.words_per_block}w) does not "
+                    f"match the config's (proj={proj_shape}, "
+                    f"blocks={n_blocks}x{wpb}w)"))
+            for name, seg, want in (("packed", lp.packed, n_blocks * wpb),
+                                    ("rp_seed", lp.rp_seed, 1),
+                                    ("zero", lp.zero, n_blocks),
+                                    ("rng", lp.rng, n_blocks)):
+                if seg is None or seg.size != want:
+                    got = "absent" if seg is None else f"{seg.size} words"
+                    out.append(Finding(
+                        PASS, "arena-geometry", f"{lwhere}/{name}",
+                        f"segment must span {want} words, got {got}"))
+        else:
+            numel = math.prod(lp.shape)
+            if lp.raw is None or lp.raw.size != numel:
+                got = "absent" if lp.raw is None else f"{lp.raw.size} elems"
+                out.append(Finding(
+                    PASS, "arena-geometry", f"{lwhere}/raw",
+                    f"raw f32 stash of shape {lp.shape} must span {numel} "
+                    f"elements, got {got}"))
+        if lp.mask_elems:
+            want = packmod.packed_len(lp.mask_elems, 1)
+            if lp.mask is None or lp.mask.size != want:
+                got = "absent" if lp.mask is None else f"{lp.mask.size}"
+                out.append(Finding(
+                    PASS, "mask-alignment", f"{lwhere}/mask",
+                    f"1-bit ReLU mask over {lp.mask_elems} elements needs "
+                    f"{want} word-aligned uint32 words (ceil), got {got} — "
+                    "a floor-divided ragged tail drops the partial word"))
+        elif lp.mask is not None:
+            out.append(Finding(PASS, "arena-geometry", f"{lwhere}/mask",
+                               "mask segment present but mask_elems == 0"))
+    for arena, sp in spans.items():
+        sp.sort()
+        for (a0, a1, wa), (b0, b1, wb) in zip(sp[:-1], sp[1:]):
+            if b0 < a1:
+                out.append(Finding(
+                    PASS, "arena-overlap", wb,
+                    f"[{b0}, {b1}) overlaps {wa} [{a0}, {a1}) in the "
+                    f"{arena} arena"))
+    return out
+
+
+def verify_plan(plan: ExecutionPlan, cfg, in_dim: int, n_nodes: int, *,
+                devices: int = 1, where: str | None = None) -> list[Finding]:
+    """All symbolic checks for one (plan, model, graph-size) triple."""
+    from repro.graph.sampling import _bucket
+    from repro.offload.gnn import plan_gnn_stashes
+
+    where = where or plan.describe()
+    out = verify_combination(plan, devices=devices, where=where)
+    sp = plan.sampling
+    if sp.kind == "full":
+        live = n_nodes
+    else:
+        if sp.n_parts > n_nodes:
+            out.append(Finding(
+                PASS, "partition-count", where,
+                f"sampling.n_parts={sp.n_parts} exceeds the graph's "
+                f"{n_nodes} nodes"))
+            return out
+        live = _bucket(-(-n_nodes // sp.n_parts), sp.node_multiple)
+    out += verify_layers(plan, cfg, in_dim, live, where)
+    if not any(x.rule in ("rp-divisibility", "layer-widths") for x in out):
+        out += verify_stash_plan(plan_gnn_stashes(cfg, in_dim, live),
+                                 where=where)
+    return out

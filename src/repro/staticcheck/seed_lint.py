@@ -1,0 +1,193 @@
+"""Seed/RNG discipline lint: an AST pass over ``src/repro``.
+
+The engine's replay guarantees rest on one seed scheme
+(:mod:`repro.engine.seeds`, constants shared through
+:mod:`repro.core.prng`).  Any module that re-derives a stream from the
+raw constants can silently desynchronize from the scheme when a constant
+changes — the counter-wraparound bug class.  Rules:
+
+* ``seed-constant`` — a numeric literal equal to one of the scheme's
+  constants (7919, 1013, the order salt, the Knuth hash multiplier)
+  anywhere outside the two modules that *define* them.  Call the
+  ``engine.seeds`` helpers instead;
+* ``prng-key-arith`` — ``PRNGKey(...)`` whose argument does arithmetic
+  (``PRNGKey(seed + 3)``-style ad-hoc stream derivation); derived streams
+  belong in ``engine/seeds.py`` where the scheme is pinned by tests;
+* ``jit-host-nondeterminism`` — calls into Python ``random`` / ``time`` /
+  ``datetime`` inside jit-reachable functions (decorated with
+  ``jax.jit``/``pmap``, passed to ``jax.jit(...)``, or nested in either):
+  host-side nondeterminism baked into a traced program is frozen at trace
+  time on one host and breaks bit-replay on the next;
+* ``sr-seed-reuse`` — two ``sr_seed``/``layer_seed``/``step_seed`` calls
+  with identical literal arguments in one function: two stashes drawing
+  the same SR stream correlate their rounding noise (the variance model
+  assumes independence across layers).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.engine import seeds as seedsmod
+from repro.staticcheck.findings import Finding
+
+PASS = "seed-lint"
+
+#: The scheme's constants; literals equal to these are flagged elsewhere.
+SEED_CONSTANTS = {
+    seedsmod.SR_SEED_PRIME,
+    seedsmod.LAYER_SEED_STRIDE,
+    seedsmod.ORDER_SALT,
+    int(seedsmod._PROBE_MULT),
+}
+
+#: Modules allowed to spell the constants: the scheme's definition sites.
+ALLOWED_FILES = ("engine/seeds.py", "core/prng.py")
+
+_HOST_MODULES = ("random", "time", "datetime")
+_SEED_HELPERS = ("sr_seed", "layer_seed", "step_seed")
+
+
+def _expr_names(node: ast.AST) -> set[str]:
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def _is_jit_wrapper(node: ast.AST) -> bool:
+    """Does this decorator / call target express jax.jit or jax.pmap?"""
+    return bool(_expr_names(node) & {"jit", "pmap", "shard_map"})
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _jitted_defs(tree: ast.Module) -> set[ast.AST]:
+    """Function defs that are jit-reachable: jit/pmap-decorated, passed by
+    name to a jit/pmap wrapper in this module, or nested inside either."""
+    by_name = {}
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(n.name, n)
+    roots = set()
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_wrapper(d) for d in n.decorator_list):
+                roots.add(n)
+        elif isinstance(n, ast.Call) and _is_jit_wrapper(n.func):
+            for arg in n.args:
+                if isinstance(arg, ast.Name) and arg.id in by_name:
+                    roots.add(by_name[arg.id])
+    jitted = set()
+    for root in roots:
+        for n in ast.walk(root):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                jitted.add(n)
+    return jitted
+
+
+def _literal_key(call: ast.Call) -> tuple | None:
+    """Hashable identity of an all-literal argument list, else None."""
+    vals = []
+    for a in list(call.args) + [kw.value for kw in call.keywords]:
+        if not isinstance(a, ast.Constant):
+            return None
+        vals.append(a.value)
+    return (_call_name(call), tuple(vals))
+
+
+def lint_source(src: str, filename: str) -> list[Finding]:
+    try:
+        tree = ast.parse(src, filename=filename)
+    except SyntaxError as e:
+        return [Finding(PASS, "syntax", f"{filename}:{e.lineno}", str(e))]
+    out = []
+    allowed = filename.endswith(ALLOWED_FILES)
+
+    # seed-constant: raw numeric literals of the scheme outside its home
+    if not allowed:
+        for n in ast.walk(tree):
+            if (isinstance(n, ast.Constant) and isinstance(n.value, int)
+                    and not isinstance(n.value, bool)
+                    and n.value in SEED_CONSTANTS):
+                out.append(Finding(
+                    PASS, "seed-constant", f"{filename}:{n.lineno}",
+                    f"raw seed constant {n.value} re-derived outside "
+                    "engine/seeds.py — use the seeds helpers so the "
+                    "scheme stays single-sourced"))
+
+    jitted = _jitted_defs(tree)
+    for n in ast.walk(tree):
+        if not isinstance(n, ast.Call):
+            continue
+        name = _call_name(n)
+        # prng-key-arith: ad-hoc stream derivation at the PRNGKey call
+        if name == "PRNGKey" and not allowed:
+            for a in list(n.args) + [kw.value for kw in n.keywords]:
+                if any(isinstance(sub, ast.BinOp) for sub in ast.walk(a)):
+                    out.append(Finding(
+                        PASS, "prng-key-arith", f"{filename}:{n.lineno}",
+                        "PRNGKey argument does seed arithmetic inline; "
+                        "derived streams belong in engine/seeds.py"))
+                    break
+
+    # jit-host-nondeterminism: host clock/PRNG calls inside traced code
+    for fn in jitted:
+        for n in ast.walk(fn):
+            if (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and isinstance(n.func.value, ast.Name)
+                    and n.func.value.id in _HOST_MODULES):
+                out.append(Finding(
+                    PASS, "jit-host-nondeterminism",
+                    f"{filename}:{n.lineno}",
+                    f"{n.func.value.id}.{n.func.attr}() inside "
+                    f"jit-reachable '{fn.name}': host nondeterminism is "
+                    "frozen at trace time and breaks bit-replay"))
+
+    # sr-seed-reuse: identical literal seed-helper calls in one function
+    for n in ast.walk(tree):
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        seen: dict[tuple, int] = {}
+        for c in ast.walk(n):
+            if (isinstance(c, ast.Call)
+                    and _call_name(c) in _SEED_HELPERS):
+                key = _literal_key(c)
+                if key is None:
+                    continue
+                if key in seen:
+                    out.append(Finding(
+                        PASS, "sr-seed-reuse", f"{filename}:{c.lineno}",
+                        f"{key[0]}{key[1]} already drawn at line "
+                        f"{seen[key]} of '{n.name}': reusing one SR "
+                        "stream across stashes correlates their "
+                        "rounding noise"))
+                else:
+                    seen[key] = c.lineno
+    return out
+
+
+def lint_file(path: pathlib.Path, root: pathlib.Path) -> list[Finding]:
+    rel = path.relative_to(root).as_posix()
+    return lint_source(path.read_text(), rel)
+
+
+def run(root: pathlib.Path | None = None) -> list[Finding]:
+    """Lint every module under ``src/repro`` (or an explicit tree)."""
+    if root is None:
+        root = pathlib.Path(__file__).resolve().parents[1]
+    out = []
+    for p in sorted(root.rglob("*.py")):
+        out.extend(lint_file(p, root.parent))
+    return out
