@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +31,7 @@ import jax.numpy as jnp
 from repro.core import CompressionConfig, compress, decompress
 from repro.core import backend
 from repro.kernels import ops
+from repro.obs.trace import stopwatch
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_compressor.json"
 
@@ -47,11 +47,11 @@ def _sweep_impls():
 
 def _time(f, *args, n=5):
     jax.block_until_ready(f(*args))  # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(n):
-        out = f(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n * 1e6
+    with stopwatch("bench/kernel", repeats=n) as sw:
+        for _ in range(n):
+            out = f(*args)
+            jax.block_until_ready(out)
+    return sw.elapsed_s / n * 1e6
 
 
 def _raw_kernel_rows():

@@ -4,7 +4,6 @@ parity over a short run (unbiased-gradient check at model level)."""
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +14,7 @@ from repro.core.pack import packed_nbytes
 from repro.data import batch_for_step
 from repro.launch.steps import make_train_step
 from repro.models import Model
+from repro.obs.trace import stopwatch
 from repro.optim import AdamWConfig, adamw_init
 
 
@@ -50,12 +50,12 @@ def run(arch="qwen3-32b", steps=15, batch=4, seq=128):
         params = model.init(jax.random.PRNGKey(0))
         state = adamw_init(params, opt)
         losses = []
-        t0 = time.perf_counter()
-        for s in range(steps):
-            toks = jnp.asarray(batch_for_step(cfg.vocab, batch, seq, s))
-            params, state, m = step(params, state, {"tokens": toks})
-            losses.append(float(m["loss"]))
-        dt = (time.perf_counter() - t0) / steps
+        with stopwatch("bench/lm_act", mode=mode, steps=steps) as sw:
+            for s in range(steps):
+                toks = jnp.asarray(batch_for_step(cfg.vocab, batch, seq, s))
+                params, state, m = step(params, state, {"tokens": toks})
+                losses.append(float(m["loss"]))
+        dt = sw.elapsed_s / steps
         full, packed = act_bytes_per_layer(cfg, batch, seq)
         results[mode] = {"losses": losses, "s_per_step": dt,
                          "stash_bytes": full if mode == "remat" else packed,

@@ -25,7 +25,6 @@ from __future__ import annotations
 import gc
 import json
 import pathlib
-import time
 from functools import partial
 
 import jax
@@ -33,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CompressionConfig
+from repro.obs.trace import stopwatch
 from repro.engine import ExecutionPlan, StashPolicy, run as engine_run
 from repro.graph import GNNConfig, cora_like
 from repro.graph.models import graph_tuple, init_gnn_params
@@ -143,9 +143,9 @@ def run(scale: float = 0.3, epochs: int = 10):
 
 
 def main():
-    t0 = time.perf_counter()
-    out = run()
-    dt = time.perf_counter() - t0
+    with stopwatch("bench/offload") as sw:
+        out = run()
+    dt = sw.elapsed_s
     rows = []
     base = out["modes"]["none"]["measured_residual_bytes"]
     for name, m in out["modes"].items():

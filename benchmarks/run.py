@@ -2,9 +2,14 @@
 Prints ``name,us_per_call,derived`` CSV; the kernel suite additionally
 sweeps the dispatched compressor API over ``impl in {jnp, interp}`` and
 drops ``BENCH_compressor.json`` next to the repo root, and the gnn_batched
-suite drops ``BENCH_gnn_batched.json`` (mini-batch vs full-graph engine)."""
+suite drops ``BENCH_gnn_batched.json`` (mini-batch vs full-graph engine).
+
+Set ``REPRO_TRACE_OUT=<base>`` to trace the whole sweep: one obs span per
+suite (plus every ``stopwatch``-timed region inside the harnesses),
+exported to ``<base>.jsonl`` and ``<base>.trace.json`` (Perfetto)."""
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
@@ -28,16 +33,41 @@ def main() -> None:
         ("offload", offload.main),  # writes BENCH_offload.json
         ("roofline", roofline.main),
     ]
+    trace_out = os.environ.get("REPRO_TRACE_OUT")
+    tracer = prev = None
+    if trace_out:
+        from repro.obs.trace import Tracer, set_tracer
+
+        tracer = Tracer()
+        prev = set_tracer(tracer)
+
     print("name,us_per_call,derived")
     failures = 0
-    for tag, fn in suites:
-        try:
-            for name, us, derived in fn():
-                print(f"{name},{us:.1f},{derived}", flush=True)
-        except Exception:
-            failures += 1
-            print(f"{tag}/ERROR,0,{traceback.format_exc(limit=2)!r}",
-                  flush=True)
+    try:
+        for tag, fn in suites:
+            try:
+                if tracer is not None:
+                    with tracer.span(f"suite/{tag}"):
+                        rows = fn()
+                else:
+                    rows = fn()
+                for name, us, derived in rows:
+                    print(f"{name},{us:.1f},{derived}", flush=True)
+            except Exception:
+                failures += 1
+                print(f"{tag}/ERROR,0,{traceback.format_exc(limit=2)!r}",
+                      flush=True)
+    finally:
+        if tracer is not None:
+            from repro.obs.trace import set_tracer
+
+            set_tracer(prev)
+            base = trace_out[:-6] if trace_out.endswith(".jsonl") else \
+                trace_out[:-5] if trace_out.endswith(".json") else trace_out
+            tracer.export_jsonl(base + ".jsonl")
+            tracer.export_chrome(base + ".trace.json")
+            print(f"# obs trace: {base}.jsonl + {base}.trace.json",
+                  file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -9,11 +9,10 @@ vs EXACT at G/R=64, >95% vs FP32).
 """
 from __future__ import annotations
 
-import time
-
 from repro.core import CompressionConfig
 from repro.graph import (GNNConfig, arxiv_like, flickr_like, train_gnn,
                          activation_memory_report)
+from repro.obs.trace import stopwatch
 
 
 def run(scale: float = 0.02, epochs: int = 60, seeds=(0,)):
@@ -35,8 +34,9 @@ def run(scale: float = 0.02, epochs: int = 60, seeds=(0,)):
                             n_classes=g.num_classes, compression=comp)
             accs, eps = [], []
             for seed in seeds:
-                t0 = time.perf_counter()
-                r = train_gnn(g, cfg, n_epochs=epochs, seed=seed)
+                with stopwatch("bench/table1", dataset=gname, quant=name,
+                               seed=seed):
+                    r = train_gnn(g, cfg, n_epochs=epochs, seed=seed)
                 accs.append(r["test_acc"])
                 eps.append(r["epochs_per_sec"])
             mem = activation_memory_report(g, cfg)

@@ -17,6 +17,11 @@ refreshed intentionally with ``scripts/refresh_experiments.py --bench``.
 Exit status: 0 when every metric holds, 1 with a per-metric report
 otherwise.  A metric missing from either side fails loudly — schema
 drift must be a conscious baseline refresh, not a silent skip.
+
+One gate is absolute rather than baseline-relative: the observability
+layer's epoch-time overhead (``BENCH_gnn_batched.json``'s ``obs``
+record) must keep obs-on within ``--obs-overhead-limit`` (default 1.05)
+of obs-off.
 """
 from __future__ import annotations
 
@@ -32,7 +37,9 @@ REPO = Path(__file__).resolve().parents[1]
 def _gnn_batched_metrics(d: dict) -> dict:
     out = {}
     for impl, arm in d.items():
-        if impl == "graph":
+        if impl in ("graph", "obs"):
+            # "obs" is gated absolutely (--obs-overhead-limit), not
+            # diffed against a baseline
             continue
         for mode in ("full", "batched"):
             out[f"{impl}/{mode}/epoch_time_us"] = (
@@ -129,6 +136,30 @@ def compare(fresh_dir: Path, baseline_dir: Path, threshold: float,
     return failures
 
 
+def check_obs_overhead(fresh_dir: Path, limit: float) -> list[str]:
+    """Absolute gate on the obs layer's epoch-time overhead: the fresh
+    ``BENCH_gnn_batched.json`` must carry an ``obs`` record with
+    ``overhead_ratio`` (obs-on / obs-off best epoch time) under
+    ``limit``.  Absolute, not baseline-relative — the contract is
+    "spans+metrics cost < 5%", not "no worse than last time"."""
+    p = fresh_dir / "BENCH_gnn_batched.json"
+    if not p.exists():
+        return [f"obs-overhead: benchmark did not produce {p}"]
+    d = json.loads(p.read_text())
+    ob = d.get("obs")
+    if not ob or "overhead_ratio" not in ob:
+        return ["obs-overhead: fresh BENCH_gnn_batched.json has no 'obs' "
+                "record (the overhead arm of the bench did not run)"]
+    ratio = ob["overhead_ratio"]
+    if ratio > limit:
+        return [f"obs-overhead: obs-on/obs-off epoch ratio {ratio:.3f} "
+                f"exceeds the {limit:.2f} limit "
+                f"(on={ob['on_epoch_s']:.4f}s off={ob['off_epoch_s']:.4f}s)"]
+    print(f"ok  BENCH_gnn_batched.json:obs/overhead_ratio: {ratio:.3f} "
+          f"(< {limit:.2f} absolute limit)")
+    return []
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir", type=Path, required=True,
@@ -141,10 +172,14 @@ def main(argv=None) -> int:
     ap.add_argument("--time-threshold", type=float, default=None,
                     help="max allowed relative regression on epoch-time "
                          "metrics (defaults to --threshold)")
+    ap.add_argument("--obs-overhead-limit", type=float, default=1.05,
+                    help="absolute ceiling on the obs-on/obs-off epoch "
+                         "time ratio reported by BENCH_gnn_batched.json")
     args = ap.parse_args(argv)
     tt = args.time_threshold if args.time_threshold is not None \
         else args.threshold
     failures = compare(args.fresh_dir, args.baseline_dir, args.threshold, tt)
+    failures += check_obs_overhead(args.fresh_dir, args.obs_overhead_limit)
     if failures:
         print("\nBENCH REGRESSIONS:", file=sys.stderr)
         for f in failures:

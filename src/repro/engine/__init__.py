@@ -21,7 +21,8 @@ import importlib
 
 from repro.engine import seeds  # noqa: F401
 from repro.engine.plan import (ExecutionPlan, KernelPolicy,  # noqa: F401
-                               PrecisionPolicy, SamplingPolicy, StashPolicy)
+                               ObsPolicy, PrecisionPolicy, SamplingPolicy,
+                               StashPolicy)
 
 _LAZY = {
     "run": "repro.engine.runner",
@@ -36,7 +37,7 @@ _LAZY = {
 }
 
 __all__ = ["ExecutionPlan", "SamplingPolicy", "PrecisionPolicy",
-           "StashPolicy", "KernelPolicy", "seeds", *_LAZY]
+           "StashPolicy", "KernelPolicy", "ObsPolicy", "seeds", *_LAZY]
 
 
 def __getattr__(name: str):

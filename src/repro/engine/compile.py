@@ -32,9 +32,11 @@ from repro.engine.plan import ExecutionPlan
 from repro.graph.models import graph_tuple
 from repro.graph.sampling import (group_batches, make_subgraph_batches,
                                   stack_batches)
+from repro.obs.session import NULL_SESSION
 from repro.optim import adamw_update
 from repro.parallel.halo import (build_halo_program, exchange_widths,
-                                 graph_mesh, halo_bytes_per_epoch)
+                                 graph_mesh, halo_bytes_per_epoch,
+                                 halo_bytes_per_round)
 from repro.parallel.sharding import dp_size, graph_batch_pspecs, to_named
 
 
@@ -246,7 +248,7 @@ class _CompiledMesh:
     kind = "mesh"
 
     def __init__(self, g, cfg, plan: ExecutionPlan, opt, batches, mesh,
-                 seed: int):
+                 seed: int, obs=NULL_SESSION):
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         sp = plan.sampling
@@ -291,8 +293,10 @@ class _CompiledMesh:
                             pr.mean_weight, pr.send_idx))
             for r in range(self.rounds)]
         from repro.offload.pager import FeaturePager
-        self.pager = FeaturePager(pr.features, mesh)
+        self._obs = obs
+        self.pager = FeaturePager(pr.features, mesh, metrics=obs.registry)
         self.pager.prefetch(0)
+        self._halo_ctr = obs.counter("halo/bytes")
         self._rebuild(cfg)
 
     def _rebuild(self, cfg):
@@ -356,6 +360,9 @@ class _CompiledMesh:
             return params, state, loss
 
         self._round_step = round_step
+        dims = [self.in_dim, *cfg.hidden, cfg.n_classes]
+        self._halo_round_bytes = halo_bytes_per_round(
+            self.prog, exchange_widths(cfg.arch, dims))
 
     def recompile(self, cfg) -> "_CompiledMesh":
         self._rebuild(cfg)
@@ -363,14 +370,18 @@ class _CompiledMesh:
 
     def step(self, params, state, epoch):
         losses = []
+        obs = self._obs
         for r in range(self.rounds):
-            feats = self.pager.fetch(r)
-            # next round's pages (next epoch's round 0 on the last round)
-            # move host->device while this round's step computes
-            self.pager.prefetch((r + 1) % self.rounds)
-            params, state, loss = self._round_step(
-                params, state, epoch, jnp.asarray(r), feats,
-                *self._round_const[r])
+            with obs.span("mesh/round", round=r):
+                with obs.span("pager/fetch", round=r):
+                    feats = self.pager.fetch(r)
+                # next round's pages (next epoch's round 0 on the last
+                # round) move host->device while this round's step computes
+                self.pager.prefetch((r + 1) % self.rounds)
+                params, state, loss = self._round_step(
+                    params, state, epoch, jnp.asarray(r), feats,
+                    *self._round_const[r])
+            self._halo_ctr.inc(self._halo_round_bytes)
             losses.append(loss)
         return params, state, jnp.mean(jnp.stack(losses))
 
@@ -398,7 +409,7 @@ class _CompiledMesh:
 
 
 def compile_plan(g, cfg, plan: ExecutionPlan, opt, *, batches=None,
-                 mesh=None, seed: int = 0):
+                 mesh=None, seed: int = 0, obs=NULL_SESSION):
     """Lower ``plan`` for graph ``g``: returns a compiled object exposing
     ``step`` (the ONE jitted epoch step), ``epoch_data``, ``recompile``
     (the autoprec refresh hook), ``calibration``, and ``result_extras``.
@@ -406,11 +417,15 @@ def compile_plan(g, cfg, plan: ExecutionPlan, opt, *, batches=None,
     ``batches`` (prebuilt ``SubgraphBatch`` list) and ``mesh`` are runtime
     resources, not plan policy — benchmarks/tests reuse one sampling pass
     across plans, and the mesh is whatever hardware the process owns.
+    ``obs`` is the run's :class:`~repro.obs.session.ObsSession`; the mesh
+    lowering threads it into per-round spans, the pager's overlap
+    histogram, and the halo byte counter (the default null session makes
+    all of that free).
     """
     if plan.sampling.kind == "full":
         if batches is not None:
             raise ValueError("prebuilt batches need partition sampling")
         return _CompiledFull(g, cfg, plan, opt)
     if plan.sampling.kind == "mesh":
-        return _CompiledMesh(g, cfg, plan, opt, batches, mesh, seed)
+        return _CompiledMesh(g, cfg, plan, opt, batches, mesh, seed, obs=obs)
     return _CompiledPartition(g, cfg, plan, opt, batches, mesh, seed)

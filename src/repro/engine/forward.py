@@ -68,6 +68,12 @@ def _build(cfg, plan: StashPlan, stash: StashPolicy, fused: str = "auto"):
     from repro.graph.models import spmm as _spmm
 
     from repro.graph.models import gnn_forward
+    from repro.obs.metrics import get_metrics
+
+    # every _build body is an lru_cache miss — i.e. a fresh custom_vjp
+    # trace the plan compiler will pay for; the obs registry counts them
+    # as the engine's recompile pressure
+    get_metrics().counter("engine/forward_builds").inc()
 
     per_layer = cfg.layer_compression()
     sage = cfg.arch == "sage"

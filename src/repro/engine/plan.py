@@ -1,7 +1,7 @@
 """ExecutionPlan: the declarative contract between every GNN training
 entry point and the engine compiler.
 
-A plan composes four **orthogonal** policies:
+A plan composes five **orthogonal** policies:
 
 * :class:`SamplingPolicy` — what is live at once: the full graph, or
   padded partition-sampled subgraph batches (Cluster-GCN flavor) with
@@ -15,7 +15,11 @@ A plan composes four **orthogonal** policies:
   device / host / pinned-paged host memory;
 * :class:`KernelPolicy` — which kernel backend the compression stack
   runs on (``jnp | interp | pallas | auto``, see
-  :mod:`repro.core.backend`).
+  :mod:`repro.core.backend`);
+* :class:`~repro.obs.policy.ObsPolicy` — runtime observability: spans,
+  metrics, and the quant-health telemetry channel (:mod:`repro.obs`).
+  Default-disabled; enabling it never changes trajectories (read-only
+  taps, gated bit-identical in ``tests/test_obs.py``).
 
 ``train_gnn`` / ``train_gnn_batched`` are thin wrappers that build a plan
 with :meth:`ExecutionPlan.from_legacy` and hand it to
@@ -31,10 +35,12 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.backend import VALID_FUSED, VALID_IMPLS
+from repro.obs.policy import ObsPolicy
 from repro.offload.engine import POLICIES as STASH_PLACEMENTS
 
 SAMPLING_KINDS = ("full", "partition", "mesh")
 PRECISION_KINDS = ("fixed", "autoprec")
+CALIBRATION_KINDS = ("probe", "obs")
 STASH_KINDS = ("tensor", "arena")
 
 
@@ -111,16 +117,25 @@ class PrecisionPolicy:
     INT2 footprint); ``refresh=k`` re-collects sensitivity stats and
     re-solves every k epochs (0 = allocate once).  A refresh that changes
     the allocation recompiles the plan's epoch step.
+
+    ``calibration`` picks the per-layer sensitivity source: ``"probe"``
+    (the two-seed gradient probe) or ``"obs"`` (the measured SR
+    dequantization variance from the quant-health telemetry channel —
+    requires ``ObsPolicy(enabled=True, quant_stats=True)`` on the plan).
     """
 
     kind: str = "fixed"           # "fixed" | "autoprec"
     bit_budget: float | None = None
     refresh: int = 0
+    calibration: str = "probe"    # "probe" | "obs"
 
     def __post_init__(self):
         if self.kind not in PRECISION_KINDS:
             raise ValueError(f"precision.kind={self.kind!r} not in "
                              f"{PRECISION_KINDS}")
+        if self.calibration not in CALIBRATION_KINDS:
+            raise ValueError(f"precision.calibration={self.calibration!r} "
+                             f"not in {CALIBRATION_KINDS}")
         if self.kind == "autoprec" and self.bit_budget is None:
             raise ValueError("precision.bit_budget=None is incompatible "
                              "with precision.kind='autoprec' (autoprec "
@@ -129,6 +144,10 @@ class PrecisionPolicy:
             raise ValueError(f"precision.bit_budget={self.bit_budget} is "
                              "incompatible with precision.kind='fixed' "
                              "(use kind='autoprec')")
+        if self.kind == "fixed" and self.calibration != "probe":
+            raise ValueError(f"precision.calibration={self.calibration!r} "
+                             "is incompatible with precision.kind='fixed' "
+                             "(calibration is an autoprec knob)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,6 +221,7 @@ class ExecutionPlan:
     precision: PrecisionPolicy = PrecisionPolicy()
     stash: StashPolicy = StashPolicy()
     kernel: KernelPolicy = KernelPolicy()
+    obs: ObsPolicy = ObsPolicy()
 
     @classmethod
     def from_legacy(cls, *, n_parts: int | None = None,
@@ -211,8 +231,8 @@ class ExecutionPlan:
                     autoprec_refresh: int = 0, method: str = "bfs",
                     halo: int = 0, node_multiple: int = 64,
                     edge_multiple: int = 256, renormalize: bool = False,
-                    shuffle: bool = True,
-                    grad_accum: int = 1) -> "ExecutionPlan":
+                    shuffle: bool = True, grad_accum: int = 1,
+                    obs: ObsPolicy | None = None) -> "ExecutionPlan":
         """Build the plan a pre-engine kwarg spelling means.
 
         ``n_parts=None`` is the full-graph loop; any integer (1 included)
@@ -237,7 +257,8 @@ class ExecutionPlan:
         stash = (StashPolicy() if offload is None
                  else StashPolicy(kind="arena", placement=offload))
         return cls(sampling=sampling, precision=precision, stash=stash,
-                   kernel=KernelPolicy(impl=impl, fused=fused))
+                   kernel=KernelPolicy(impl=impl, fused=fused),
+                   obs=obs if obs is not None else ObsPolicy())
 
     @property
     def offload(self) -> str | None:
@@ -257,6 +278,13 @@ class ExecutionPlan:
                 else f"autoprec {self.precision.bit_budget} bits/elt "
                      f"(refresh {self.precision.refresh})")
         stash = (f"{self.stash.kind}@{self.stash.placement}")
-        return (f"sampling={samp} | precision={prec} | stash={stash} | "
+        base = (f"sampling={samp} | precision={prec} | stash={stash} | "
                 f"kernel={self.kernel.impl or 'cfg'}"
                 f" fused={self.kernel.fused}")
+        if self.obs.enabled:
+            on = [tag for tag, flag in (("trace", self.obs.trace),
+                                        ("metrics", self.obs.metrics),
+                                        ("quant", self.obs.quant_stats))
+                  if flag]
+            base += f" | obs={'+'.join(on) or 'on'}"
+        return base

@@ -44,10 +44,18 @@ class AutoprecController:
     probe: ``dx`` and the ReLU mask are SR-noise-free, so
     ``dw_l(s₁) − dw_l(s₂)`` isolates exactly the dequantization noise
     layer l's stash injects.
+
+    ``calibration="obs"`` replaces the grad probe with the quant-health
+    telemetry channel (:mod:`repro.obs.quantstats`): the *measured* SR
+    dequantization variance at the template widths, divided by the same
+    bit-scaling curve — one probe pass instead of two gradient passes,
+    and the sensitivity source is the very statistic the runtime monitor
+    reports against the Eq. 10 prediction.
     """
 
     def __init__(self, gt, labels, tr_mask, cfg, bit_budget: float,
-                 refresh: int, seed: int, node_mask=None):
+                 refresh: int, seed: int, node_mask=None,
+                 calibration: str = "probe"):
         self.templates = cfg.layer_compression()
         if all(c is None for c in self.templates):
             raise ValueError(
@@ -60,6 +68,7 @@ class AutoprecController:
         self.tr_mask = tr_mask
         self.node_mask = node_mask
         self.seed = seed
+        self.calibration = calibration
         self.budget_bytes = None
         self.bits: tuple[int, ...] | None = None
         self._grad_fn = jax.jit(jax.grad(_probe_loss), static_argnums=(4,))
@@ -85,6 +94,27 @@ class AutoprecController:
             out.append(dataclasses.replace(st, grad_sens=sens or None))
         return out
 
+    def _obs_sens(self, params, stats):
+        """Telemetry-sourced sensitivities: the measured dequantization
+        variance of each layer's stash at the template width, re-priced
+        through :func:`repro.core.autoprec.normalized_sr_variance` — the
+        ``grad_sens`` contract without any gradient pass."""
+        from repro.obs.quantstats import (measure_quant_health,
+                                          measured_sensitivity)
+
+        measured = measure_quant_health(params, self.gt, self.base_cfg,
+                                        seed=self.seed)
+        sens = measured_sensitivity(measured, self.templates)
+        out = []
+        for st, s in zip(stats, sens):
+            if st is None or s is None:
+                out.append(st)
+                continue
+            # a degenerate zero measurement (constant activations) keeps
+            # the range-moment fallback, like a zero grad probe
+            out.append(dataclasses.replace(st, grad_sens=s or None))
+        return out
+
     def allocate(self, params):
         """(re)solve the allocation; returns (cfg, changed)."""
         from repro.graph.analysis import collect_layer_stats
@@ -94,7 +124,9 @@ class AutoprecController:
         if self.budget_bytes is None:
             self.budget_bytes = autoprec.budget_bytes_for(
                 stats, self.templates, self.bit_budget)
-        stats = self._probe_grad_sens(params, stats)
+        stats = (self._obs_sens(params, stats)
+                 if self.calibration == "obs"
+                 else self._probe_grad_sens(params, stats))
         bits = autoprec.allocate_bits(stats, self.templates,
                                       self.budget_bytes)
         changed = bits != self.bits

@@ -1,6 +1,6 @@
 """GNN substrate: the paper's own experimental domain (GCN / GraphSAGE),
 full-graph and partition-sampled mini-batch training."""
-from repro.graph.analysis import collect_layer_stats
+from repro.graph.analysis import collect_layer_stats, variance_validation_report
 from repro.graph.data import (Graph, arxiv_like, cora_like, flickr_like,
                               papers100m_like, stream_edge_chunks,
                               synthetic_graph, synthetic_graph_streamed)
@@ -19,5 +19,5 @@ __all__ = [
     "make_subgraph_batches", "stack_batches", "group_batches",
     "train_gnn", "train_gnn_batched", "train_gnn_mesh",
     "activation_memory_report",
-    "collect_layer_stats",
+    "collect_layer_stats", "variance_validation_report",
 ]

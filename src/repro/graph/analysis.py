@@ -127,6 +127,29 @@ def collect_layer_stats(params, graph, cfg: GNNConfig,
     return stats
 
 
+def variance_validation_report(params, graph, cfg: GNNConfig,
+                               seed: int = 0) -> list[dict]:
+    """Measured SR dequantization variance vs the Eq. 10 prediction, one
+    row per compressed layer.
+
+    Runs the obs telemetry probe (:mod:`repro.obs.quantstats`) on
+    ``params`` — the same quantize→dequantize the training stash performs,
+    same per-layer seed scheme — and prices the layer's
+    :class:`~repro.core.autoprec.LayerStats` through
+    :func:`repro.core.autoprec.expected_layer_variance`.  Rows carry
+    ``measured_var`` / ``predicted_var`` / ``ratio`` / ``sat_rate``; a
+    ratio far from 1 on a real layer means the variance model the
+    autoprec allocator prices with has drifted from what the quantizer
+    does.
+    """
+    # obs.quantstats reaches back into this module for _iter_layer_inputs
+    # (lazily, inside the probe) — import at call time, not module load
+    from repro.obs.quantstats import health_rows, measure_quant_health
+
+    measured = measure_quant_health(params, graph, cfg, seed=seed)
+    return health_rows(measured, cfg.layer_compression())
+
+
 def collect_projected_activations(params, graph, cfg: GNNConfig,
                                   rp_ratio: int = 8, seed: int = 0,
                                   bits: int = 2):

@@ -219,7 +219,8 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
                              batch_nodes: int | None = None,
                              node_multiple: int = 64,
                              offload: str | None = None,
-                             plan: ExecutionPlan | None = None) -> dict:
+                             plan: ExecutionPlan | None = None,
+                             quant_health: list | None = None) -> dict:
     """Bytes of *saved-for-backward* activations — the paper's Table-1 "M"
     column model, per layer and (optionally) per subgraph batch.
 
@@ -262,6 +263,11 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
     two-layer prefetch window for host policies), validated best-effort
     against ``jax.live_arrays`` (``measured_live_bytes``) and the
     backend's device memory stats where the platform exposes them.
+
+    ``quant_health`` attaches the obs telemetry channel's per-layer
+    measured-vs-Eq.10 rows (:func:`repro.obs.quantstats.health_rows`, or
+    ``result["obs"].quant_rows()``) verbatim under ``"quant_health"`` —
+    the byte ledger and the variance ledger of the same run, one report.
     """
     if plan is None:
         plan = ExecutionPlan.from_legacy(
@@ -329,4 +335,6 @@ def activation_memory_report(g: Graph, cfg: GNNConfig, n_parts: int = 1,
             "device_peak_bytes":
                 stats.get("peak_bytes_in_use") if stats else None,
         }
+    if quant_health:
+        out["quant_health"] = quant_health
     return out

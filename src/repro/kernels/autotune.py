@@ -131,10 +131,14 @@ def get_tiles(kind: str, m: int, d: int, n: int, bits: int,
     kind "fwd" → (tm, tn); kind "bwd" → (tile_rows, tn) with tile_rows
     == m outside the cache (the bit-exact default).
     """
+    from repro.obs.metrics import get_metrics
+
     hit = _load_cache().get(_cache_key(kind, m, d, n, bits, group_size,
                                        backend))
     if hit:
+        get_metrics().counter("autotune/cache_hit").inc()
         return tuple(hit)
+    get_metrics().counter("autotune/cache_miss").inc()
     if kind == "bwd":
         return m, min(128, n)
     cands = fwd_candidates(m, d, n, group_size)

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,7 @@ from repro.configs import get, reduce_for_smoke
 from repro.data import batch_for_step
 from repro.launch.steps import make_serve_step
 from repro.models import Model
+from repro.obs.trace import stopwatch
 
 
 def _stash_prompt_context(params, prompts, policy: str) -> dict:
@@ -94,19 +94,20 @@ def main(argv=None):
             kwargs["enc_embeds"] = jax.random.normal(
                 jax.random.PRNGKey(done),
                 (n, args.prompt_len, cfg.d_model), jnp.bfloat16)
-        t0 = time.perf_counter()
-        logits, cache = model.prefill(params, jnp.asarray(prompts),
-                                      max_seq=max_seq, **kwargs)
-        jax.block_until_ready(logits)
-        t_prefill += time.perf_counter() - t0
+        with stopwatch("serve/prefill", batch=n) as sw:
+            logits, cache = model.prefill(params, jnp.asarray(prompts),
+                                          max_seq=max_seq, **kwargs)
+            jax.block_until_ready(logits)
+        t_prefill += sw.elapsed_s
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         gen = [np.asarray(tok)]
-        t0 = time.perf_counter()
-        for _ in range(args.gen_len - 1):
-            tok, _, cache = serve(params, cache, tok)
-            gen.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        t_decode += time.perf_counter() - t0
+        with stopwatch("serve/decode", batch=n,
+                       gen_len=args.gen_len) as sw:
+            for _ in range(args.gen_len - 1):
+                tok, _, cache = serve(params, cache, tok)
+                gen.append(np.asarray(tok))
+            jax.block_until_ready(tok)
+        t_decode += sw.elapsed_s
         n_decoded += (args.gen_len - 1) * n
         outputs.append(np.concatenate(gen, axis=1))
         done += n

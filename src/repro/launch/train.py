@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +22,8 @@ from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.launch.steps import make_train_step
 from repro.models import Model
 from repro.optim import AdamWConfig, adamw_init
+from repro.obs import ObsPolicy
+from repro.obs.trace import stopwatch
 from repro.parallel import annotate
 from repro.parallel.sharding import batch_pspecs, param_pspecs, to_named
 from repro.runtime import StragglerMonitor, TrainRunner
@@ -52,6 +53,11 @@ def _graph_main(args):
                     n_classes=g.num_classes, compression=comp)
     lr = args.lr if args.lr is not None else 5e-3   # GNN engines' default
     offload = None if args.offload == "none" else args.offload
+    obs_policy = ObsPolicy()
+    if args.obs:
+        obs_policy = ObsPolicy(enabled=True,
+                               quant_stats=comp is not None,
+                               quant_stats_every=args.obs_quant_every)
     if args.mesh_parts:
         # mesh-sharded partition-parallel engine: the graph mesh is built
         # by the compiler (largest divisor of n_parts the host allows);
@@ -59,7 +65,8 @@ def _graph_main(args):
         plan = ExecutionPlan(
             sampling=SamplingPolicy(kind="mesh", n_parts=args.mesh_parts,
                                     shuffle=False),
-            kernel=KernelPolicy(fused=args.act_fused))
+            kernel=KernelPolicy(fused=args.act_fused),
+            obs=obs_policy)
         mesh = None
     else:
         mesh = (make_production_mesh() if args.production_mesh
@@ -67,7 +74,8 @@ def _graph_main(args):
         plan = ExecutionPlan.from_legacy(
             n_parts=args.graph_batches, fused=args.act_fused,
             offload=offload, bit_budget=args.bit_budget,
-            autoprec_refresh=args.autoprec_refresh, halo=args.graph_halo)
+            autoprec_refresh=args.autoprec_refresh, halo=args.graph_halo,
+            obs=obs_policy)
     print(f"plan: {plan.describe()}")
     r = engine_run(g, cfg, plan, AdamWConfig(lr=lr, weight_decay=0.0),
                    n_epochs=args.steps, seed=0, verbose=True, mesh=mesh)
@@ -80,10 +88,29 @@ def _graph_main(args):
               f"halo traffic/epoch")
         print(f"feature pager: {pg['host_bytes'] / 1e6:.2f} MB host-resident "
               f"in {pg['n_pages']} pages/round, overlap "
-              f"{pg['overlap_frac']:.2f}")
+              f"{pg['overlap_frac']:.2f} (last {pg['overlap_window_size']} "
+              f"fetches: {pg['overlap_frac_window']:.2f})")
+    quant_rows = []
+    obs = r.get("obs")
+    if obs is not None:
+        quant_rows = obs.quant_rows()
+        if quant_rows:
+            ep = quant_rows[0]["epoch"]
+            print(f"quant health (epoch {ep}): layer bits measured "
+                  "predicted ratio sat%")
+            for row in quant_rows:
+                print(f"  L{row['layer']} {row['bits']}b "
+                      f"{row['measured_var']:.3e} "
+                      f"{row['predicted_var']:.3e} "
+                      f"{row['ratio']:.2f} {100 * row['sat_rate']:.1f}%")
+        if args.trace_out:
+            paths = obs.export(args.trace_out)
+            print(f"obs trace: {paths['jsonl']} (spans) + "
+                  f"{paths['chrome']} (load at ui.perfetto.dev)")
     cfg = r.get("cfg", cfg)   # autoprec may have re-allocated per-layer bits
     rep = activation_memory_report(g, cfg, batch_nodes=r["batch_nodes"],
-                                   plan=plan)
+                                   plan=plan,
+                                   quant_health=quant_rows or None)
     if "arena" in rep:
         a = rep["arena"]
         print(f"stash arena[{a['policy']}]: {a['planned_bytes'] / 1e6:.2f} MB "
@@ -177,6 +204,18 @@ def main(argv=None):
     ap.add_argument("--autoprec-refresh", type=int, default=0,
                     help="re-collect sensitivity stats and re-solve the "
                          "allocation every N epochs (0 = allocate once)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the runtime observability layer "
+                         "(repro.obs): engine spans, metrics, and — when "
+                         "compression is on — the per-layer quant-health "
+                         "probe (graph engines; bit-identical to obs-off)")
+    ap.add_argument("--trace-out", default=None, metavar="BASE",
+                    help="with --obs: export the span trace to BASE.jsonl "
+                         "and BASE.trace.json (Chrome trace_event — load "
+                         "at ui.perfetto.dev)")
+    ap.add_argument("--obs-quant-every", type=int, default=10, metavar="N",
+                    help="with --obs: run the quant-health probe every N "
+                         "epochs")
     args = ap.parse_args(argv)
 
     if args.graph_batches and args.mesh_parts:
@@ -247,10 +286,10 @@ def main(argv=None):
             state = (params, opt_state)
             hist = []
             for step in range(args.steps):
-                t0 = time.perf_counter()
-                state, m = step_fn(state, make_batch(step))
+                with stopwatch("lm/step", step=step) as sw:
+                    state, m = step_fn(state, make_batch(step))
                 hist.append({"step": step, "loss": float(m["loss"]),
-                             "dt": time.perf_counter() - t0})
+                             "dt": sw.elapsed_s})
         first, last = hist[0]["loss"], hist[-1]["loss"]
         print(f"steps={len(hist)} loss {first:.4f} -> {last:.4f}")
         return hist

@@ -1,0 +1,45 @@
+"""ObsPolicy: the plan-composable observability contract.
+
+The fifth :class:`~repro.engine.plan.ExecutionPlan` policy.  Default is
+fully disabled — a disabled policy costs nothing at runtime (the runner
+binds the shared null session, every span/metric call is a no-op method
+on a singleton) and keeps plan hashes/trajectories untouched.
+
+``enabled=True`` turns on the host-side layer: spans around plan
+compile, epochs, mesh rounds, autoprec re-solves and pager fetch waits
+(``trace``), and the counters/gauges/histograms registry (``metrics``).
+Neither enters jitted code, so trajectories stay **bit-identical** to a
+disabled run — gated in ``tests/test_obs.py`` and by the CI overhead
+check (obs-on/obs-off epoch-time ratio < 1.05).
+
+``quant_stats=True`` additionally runs the per-layer quantization-health
+probe every ``quant_stats_every`` epochs: a *separate* jitted pass
+(:mod:`repro.obs.quantstats`) that replays each compressed layer's
+RP → block → SR pipeline on the live params and ships block range
+moments, saturation rate, and the measured SR dequantization variance to
+the host through one batched ``jax.debug.callback`` — the training
+step's jaxpr is untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsPolicy:
+    enabled: bool = False
+    trace: bool = True
+    metrics: bool = True
+    quant_stats: bool = False
+    quant_stats_every: int = 10
+
+    def __post_init__(self):
+        # Validation errors name the offending field as ``policy.field=value``
+        # (the ExecutionPlan convention; plan_verify re-raises these verbatim).
+        if self.quant_stats_every < 1:
+            raise ValueError(f"obs.quant_stats_every={self.quant_stats_every} "
+                             "must be >= 1")
+        if self.quant_stats and not self.enabled:
+            raise ValueError("obs.quant_stats=True is incompatible with "
+                             "obs.enabled=False (the telemetry channel rides "
+                             "the obs session; enable it)")

@@ -1,0 +1,223 @@
+"""Quantization-health telemetry: the opt-in per-layer in-graph stats
+channel (``ObsPolicy(quant_stats=True)``).
+
+For every compressed layer the probe replays, on the live params, exactly
+the stash pipeline training runs — the linear input, RP at the layer's
+``rp_ratio`` under the forward pass's own seed derivation, regrouped into
+the layer's quantization blocks, stochastically rounded onto its level
+table — and reduces it in-graph to a handful of scalars per layer:
+
+* block range moments (``E[r]``, ``E[r²]`` — the allocator's sensitivity
+  scale),
+* clip/saturation rate (fraction of elements landing on the endpoint
+  codes 0 / B),
+* the **measured** SR dequantization variance ``Σ(x̂ − x)²`` — the
+  realized value of the quantity the paper's Eq. 10 predicts.
+
+All layers' stats ship to the host through ONE batched
+``jax.debug.callback`` (:func:`tap` — the lint-sanctioned host-callback
+route), so the channel is a single stacked ``(L, K)`` transfer per probe
+and never touches the training step's jaxpr: obs-on trajectories are
+bit-identical to obs-off by construction.
+
+:func:`health_rows` reports measured-vs-predicted side by side (the
+runtime validation of the paper's variance-model correction), and
+:func:`measured_sensitivity` turns the measured variance into the
+``grad_sens``-style per-layer scale :class:`AutoprecController` can use
+instead of the two-seed gradient probe
+(``PrecisionPolicy(calibration="obs")``).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quantmod
+from repro.core import random_projection as rpmod
+from repro.core.autoprec import (LayerStats, expected_layer_variance,
+                                 normalized_sr_variance)
+from repro.engine.seeds import layer_seed
+
+#: Order of the per-layer stat vector :func:`layer_health` emits.
+STAT_FIELDS = ("n_valid", "n_blocks", "sq_err", "rng_mean", "rng_sq_mean",
+               "sat_rate")
+
+
+def tap(fn, *args) -> None:
+    """Ship ``*args`` to host callback ``fn`` from inside jitted code.
+
+    The ONE sanctioned spelling of a host callback in traced code: the
+    seed-lint ``host-callback-tap`` rule flags raw ``jax.debug.callback``
+    / ``pure_callback`` / ``io_callback`` calls in jit-reachable
+    functions outside this module, and the ``obs-tap-dataflow`` rule
+    keeps :func:`tap` itself off the residual/stash dataflow path
+    (``engine/forward.py`` and the offload store) — taps are read-only
+    observers, never part of the gradient contract.
+    """
+    jax.debug.callback(fn, *args)
+
+
+def layer_health(x, comp, seed, li: int):
+    """In-graph health stats of one layer's stash (:data:`STAT_FIELDS`).
+
+    Replays the compress path on ``x`` exactly as
+    ``compressed_matmul`` stashes it: per-layer seed
+    ``layer_seed(seed, li)``, RP seed ``^ 0xA5A5_A5A5`` (the derivation
+    ``core.compressor.compress`` applies), the layer's own group_size /
+    level table.  The padded tail ``group_reshape`` replicates is masked
+    out of the error and saturation sums, so ``sq_err`` is the measured
+    SR dequantization variance of the ``n_valid`` real elements.
+    """
+    ls = layer_seed(jnp.uint32(seed), li)
+    xs = x
+    if comp.rp_ratio > 1:
+        rp_seed = ls ^ jnp.uint32(0xA5A5_A5A5)
+        xs = rpmod.rp(x, rp_seed, max(1, x.shape[1] // comp.rp_ratio))
+    blocks, n_valid = quantmod.group_reshape(xs, comp.group_size)
+    lv = comp.levels()
+    if lv is None:
+        lv = quantmod.uniform_levels(comp.bits)
+    codes, zero, rng = quantmod.quantize_grouped(blocks, comp.bits, ls, lv)
+    deq = quantmod.dequantize_grouped(codes, zero, rng, comp.bits, lv)
+    valid = (jnp.arange(blocks.size, dtype=jnp.uint32).reshape(blocks.shape)
+             < jnp.uint32(n_valid)).astype(jnp.float32)
+    sat = ((codes == 0) | (codes == lv.shape[0] - 1)).astype(jnp.float32)
+    rngf = rng.astype(jnp.float32)
+    return jnp.stack([
+        jnp.float32(n_valid),
+        jnp.float32(blocks.shape[0]),
+        jnp.sum(((deq - blocks) ** 2) * valid),
+        jnp.mean(rngf),
+        jnp.mean(rngf ** 2),
+        jnp.sum(sat * valid) / jnp.float32(n_valid),
+    ])
+
+
+def _compressed_layers(cfg) -> list[int]:
+    return [li for li, c in enumerate(cfg.layer_compression())
+            if c is not None]
+
+
+def _stacked_health(params, gt, cfg, seed):
+    """(L_compressed, K) stacked stats over the network, in-graph."""
+    # lazy: the graph package imports the engine at module load
+    from repro.graph.analysis import _iter_layer_inputs
+
+    per_layer = cfg.layer_compression()
+    rows = []
+    for li, x in _iter_layer_inputs(params, gt, cfg):
+        comp = per_layer[li]
+        if comp is not None:
+            rows.append(layer_health(x, comp, seed, li))
+    if not rows:
+        return jnp.zeros((0, len(STAT_FIELDS)), jnp.float32)
+    return jnp.stack(rows)
+
+
+def _unpack(cfg, arr) -> list[dict | None]:
+    """One measured dict per network layer (None where uncompressed)."""
+    out: list[dict | None] = [None] * len(cfg.layer_compression())
+    for li, row in zip(_compressed_layers(cfg), np.asarray(arr)):
+        n_valid, n_blocks, sq_err, rmean, rsq, sat = (float(v) for v in row)
+        out[li] = {"layer": li, "n_elements": int(n_valid),
+                   "n_blocks": int(n_blocks), "measured_var": sq_err,
+                   "rng_mean": rmean, "rng_sq_mean": rsq, "sat_rate": sat}
+    return out
+
+
+def measure_quant_health(params, gt, cfg, seed: int = 0) -> list[dict | None]:
+    """Run the telemetry probe once, eagerly; per-layer measured dicts.
+
+    The same jitted probe + :func:`tap` channel the runtime monitor uses
+    (one spelling of the measurement), drained synchronously — this is
+    what ``AutoprecController`` calls under ``calibration="obs"``.
+    """
+    box: dict = {}
+
+    def sink(stats):
+        box["stats"] = np.asarray(stats)
+
+    def probe(params, gt, seed):
+        tap(sink, _stacked_health(params, gt, cfg, seed))
+
+    jax.jit(probe)(params, gt, jnp.uint32(seed))
+    jax.effects_barrier()
+    return _unpack(cfg, box["stats"])
+
+
+def health_rows(measured, templates) -> list[dict]:
+    """Measured rows merged with the Eq. 10 prediction, side by side.
+
+    The prediction is priced from the probe's *own* observed range
+    moments — ``n_blocks · G · E[r²] · normalized_sr_variance`` — so the
+    ratio column isolates the distribution-model error (CN_[1/D] vs the
+    empirical activations), not the range estimate.
+    """
+    rows = []
+    for m, tmpl in zip(measured, templates):
+        if m is None or tmpl is None:
+            continue
+        stat = LayerStats(shape=(m["n_elements"],), n_blocks=m["n_blocks"],
+                          rng_sq_mean=m["rng_sq_mean"])
+        pred = expected_layer_variance(stat, tmpl)
+        rows.append({**m, "bits": tmpl.bits, "predicted_var": pred,
+                     "ratio": (m["measured_var"] / pred if pred > 0
+                               else float("inf"))})
+    return rows
+
+
+def measured_sensitivity(measured, templates) -> list[float | None]:
+    """Per-layer sensitivity from the measured dequant variance.
+
+    Divides out the template width's bit-scaling curve so any candidate
+    width re-prices as ``sens * normalized_sr_variance(candidate)`` —
+    the exact contract :class:`repro.core.autoprec.LayerStats.grad_sens`
+    carries, sourced from telemetry instead of the two-seed grad probe.
+    """
+    out: list[float | None] = []
+    for m, tmpl in zip(measured, templates):
+        if m is None or tmpl is None:
+            out.append(None)
+            continue
+        out.append(m["measured_var"]
+                   / max(normalized_sr_variance(tmpl), 1e-30))
+    return out
+
+
+class QuantHealthMonitor:
+    """The runtime channel: one jitted probe per cfg, records appended by
+    the batched callback, merged rows on demand."""
+
+    def __init__(self, cfg, seed: int = 0):
+        self.cfg = cfg
+        self.seed = seed
+        self.templates = cfg.layer_compression()
+        self.records: list[tuple[int, np.ndarray]] = []
+
+        def sink(epoch, stats):
+            self.records.append((int(epoch), np.asarray(stats)))
+
+        def probe(params, gt, epoch):
+            tap(sink, epoch, _stacked_health(params, gt, cfg, self.seed))
+
+        self._probe_fn = jax.jit(probe)
+
+    def probe(self, params, gt, epoch: int) -> None:
+        self._probe_fn(params, gt, jnp.asarray(epoch, jnp.int32))
+
+    def rows(self) -> list[dict]:
+        """Latest probe's measured-vs-Eq.10 rows (flushes the channel)."""
+        jax.effects_barrier()
+        if not self.records:
+            return []
+        epoch, arr = self.records[-1]
+        rows = health_rows(_unpack(self.cfg, arr), self.templates)
+        for r in rows:
+            r["epoch"] = epoch
+        return rows
+
+    def history(self) -> list[tuple[int, list[dict]]]:
+        jax.effects_barrier()
+        return [(e, health_rows(_unpack(self.cfg, a), self.templates))
+                for e, a in self.records]

@@ -19,8 +19,12 @@ On platforms with a pinned host memory space the pages are staged there
 at construction (memory-kind ``device_put``); on CPU the host pages are
 plain numpy (host memory *is* the default space).  The pager records
 blocked-vs-inflight wall time per fetch; ``stats()['overlap_frac']`` is
-the fraction of copy time hidden behind compute — the number
-``BENCH_gnn_dist.json`` reports.
+the lifetime fraction of copy time hidden behind compute — the number
+``BENCH_gnn_dist.json`` reports — and every fetch also lands a per-fetch
+overlap observation in a windowed histogram (through the obs metrics
+registry when one is passed), so ``overlap_frac_window`` shows *recent*
+behavior: a single end-of-run scalar averages early-epoch stalls away,
+the window does not.
 """
 from __future__ import annotations
 
@@ -31,14 +35,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.obs.metrics import MetricsRegistry
 from repro.offload.engine import PAGE_WORDS, host_memory_kind
+
+#: Default size of the per-fetch overlap window (rounds, not epochs).
+OVERLAP_WINDOW = 32
 
 
 class FeaturePager:
     """Pages one round of partition features to the mesh at a time."""
 
     def __init__(self, features: np.ndarray, mesh, *,
-                 page_rows: int | None = None):
+                 page_rows: int | None = None,
+                 metrics: MetricsRegistry | None = None,
+                 window: int = OVERLAP_WINDOW):
         if features.ndim != 4:
             raise ValueError("features must be (rounds, m, n_pad, F); got "
                              f"shape {features.shape}")
@@ -66,6 +76,14 @@ class FeaturePager:
         self._span_s = 0.0
         self._fetches = 0
         self._prefetch_hits = 0
+        # a private enabled registry when the caller passes none, so the
+        # windowed stats exist even without an obs session
+        reg = metrics if metrics is not None else MetricsRegistry()
+        self._overlap = reg.histogram("pager/overlap_frac", window=window)
+        self._fetch_ctr = reg.counter("pager/fetches")
+        self._hit_ctr = reg.counter("pager/prefetch_hits")
+        reg.gauge("pager/round_bytes").set(self.round_bytes)
+        reg.gauge("pager/host_bytes").set(self.host_bytes)
 
     def prefetch(self, r: int) -> None:
         """Start moving round ``r``'s pages to the mesh (idempotent until
@@ -81,6 +99,7 @@ class FeaturePager:
         sharded over the ``graph`` axis.  Consumes the prefetch."""
         if r in self._inflight:
             self._prefetch_hits += 1
+            self._hit_ctr.inc()
         else:
             self.prefetch(r)
         handles, t0 = self._inflight.pop(r)
@@ -88,9 +107,13 @@ class FeaturePager:
         for h in handles:
             h.block_until_ready()
         t_done = time.perf_counter()
-        self._blocked_s += t_done - t_wait
-        self._span_s += max(t_done - t0, 1e-12)
+        blocked = t_done - t_wait
+        span = max(t_done - t0, 1e-12)
+        self._blocked_s += blocked
+        self._span_s += span
         self._fetches += 1
+        self._fetch_ctr.inc()
+        self._overlap.observe(max(0.0, 1.0 - blocked / span))
         if len(handles) == 1:
             return handles[0]
         return jnp.concatenate(handles, axis=1)
@@ -109,4 +132,9 @@ class FeaturePager:
             "span_s": span,
             "overlap_frac": (0.0 if span == 0.0
                              else max(0.0, 1.0 - self._blocked_s / span)),
+            # windowed running stat: the last OVERLAP_WINDOW fetches'
+            # per-fetch overlap, not the lifetime average
+            "overlap_frac_window": self._overlap.window_mean,
+            "overlap_frac_window_min": self._overlap.window_min,
+            "overlap_window_size": self._overlap.window_size,
         }

@@ -247,11 +247,18 @@ def exchange_widths(arch: str, dims) -> tuple[int, ...]:
     return tuple(dims[1:]) if arch == "gcn" else tuple(dims[:-1])
 
 
-def halo_bytes_per_epoch(prog: HaloProgram, widths) -> int:
-    """f32 bytes crossing the mesh per epoch (send side, all devices):
-    each of the ``m`` devices ships an ``(m, H, width)`` buffer per layer
-    per round."""
+def halo_bytes_per_round(prog: HaloProgram, widths) -> int:
+    """f32 bytes crossing the mesh in ONE round (send side, all devices):
+    each of the ``m`` devices ships an ``(m, H, width)`` buffer per
+    layer.  This is the per-round granularity the obs metrics registry
+    counts (``halo/bytes``); :func:`halo_bytes_per_epoch` is its
+    ``rounds``-multiple."""
     if prog.halo == 0:
         return 0
     per_layer = prog.group * prog.group * prog.halo * 4
-    return int(prog.rounds * per_layer * sum(widths))
+    return int(per_layer * sum(widths))
+
+
+def halo_bytes_per_epoch(prog: HaloProgram, widths) -> int:
+    """f32 bytes crossing the mesh per epoch (send side, all devices)."""
+    return prog.rounds * halo_bytes_per_round(prog, widths)

@@ -9,8 +9,9 @@ Four layers of checks, all pure arithmetic over static plan state:
 * **cross-policy combinations** — the constraints
   :mod:`repro.engine.compile` enforces at compile time (mesh × arena,
   mesh × autoprec, mesh × fused='on', host offload under data
-  parallelism, whole update groups, mesh divisors), checked here without
-  building a single batch;
+  parallelism, whole update groups, mesh divisors, obs-sourced autoprec
+  calibration needing the telemetry channel enabled), checked here
+  without building a single batch;
 * **per-layer feasibility** — bit-width/word-alignment of every layer's
   quantization config (autoprec mixed-bit tuples included), RP
   divisibility, and ``fused='on'`` eligibility via the same
@@ -80,6 +81,13 @@ def verify_combination(plan: ExecutionPlan, *, devices: int = 1,
                 f"sampling.n_parts={sp.n_parts} shares no divisor with "
                 f"the {devices}-device mesh: the graph axis degenerates "
                 "to m=1 (sequential rounds, no mesh parallelism)")
+    pp = plan.precision
+    if (pp.kind == "autoprec" and pp.calibration == "obs"
+            and not (plan.obs.enabled and plan.obs.quant_stats)):
+        bad("obs-calibration",
+            "precision.calibration='obs' sources sensitivities from the "
+            "quant-health telemetry channel; the plan needs "
+            "obs=ObsPolicy(enabled=True, quant_stats=True)")
     if sp.kind == "partition":
         group = max(devices, 1) * sp.grad_accum
         if sp.n_parts % group:

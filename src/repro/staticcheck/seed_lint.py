@@ -21,7 +21,20 @@ changes — the counter-wraparound bug class.  Rules:
 * ``sr-seed-reuse`` — two ``sr_seed``/``layer_seed``/``step_seed`` calls
   with identical literal arguments in one function: two stashes drawing
   the same SR stream correlate their rounding noise (the variance model
-  assumes independence across layers).
+  assumes independence across layers);
+* ``host-callback-tap`` — raw ``jax.debug.callback`` / ``pure_callback``
+  / ``io_callback`` calls inside jit-reachable functions anywhere except
+  the two sanctioned homes: the obs telemetry tap
+  (``obs/quantstats.py``) and the offload callback host store
+  (``offload/engine.py``).  An untracked host callback is invisible to
+  the jaxpr byte audit and a bit-replay hazard — route through
+  :func:`repro.obs.quantstats.tap`;
+* ``obs-tap-dataflow`` — any ``tap(...)`` call inside the
+  residual/stash dataflow modules (``engine/forward.py``,
+  ``offload/engine.py``, ``offload/arena.py``): obs taps must observe
+  training from a *separate* probe pass, never from inside the stash
+  path, or obs-on jaxprs diverge from obs-off and the bit-identity gate
+  is forfeit.
 """
 from __future__ import annotations
 
@@ -46,6 +59,19 @@ ALLOWED_FILES = ("engine/seeds.py", "core/prng.py")
 
 _HOST_MODULES = ("random", "time", "datetime")
 _SEED_HELPERS = ("sr_seed", "layer_seed", "step_seed")
+
+#: Host-callback spellings; jit-reachable calls outside the sanctioned
+#: homes are findings.
+_CALLBACK_NAMES = ("callback", "pure_callback", "io_callback")
+
+#: The two modules allowed to spell a host callback in traced code: the
+#: obs telemetry tap and the offload callback host store.
+_CALLBACK_FILES = ("obs/quantstats.py", "offload/engine.py")
+
+#: The residual/stash dataflow path: obs taps are banned here outright
+#: (the offload store's callbacks are its transport, not obs taps).
+_DATAFLOW_FILES = ("engine/forward.py", "offload/engine.py",
+                   "offload/arena.py")
 
 
 def _expr_names(node: ast.AST) -> set[str]:
@@ -154,6 +180,33 @@ def lint_source(src: str, filename: str) -> list[Finding]:
                     f"{n.func.value.id}.{n.func.attr}() inside "
                     f"jit-reachable '{fn.name}': host nondeterminism is "
                     "frozen at trace time and breaks bit-replay"))
+
+    # host-callback-tap: raw host callbacks in traced code outside the
+    # sanctioned homes
+    if not filename.endswith(_CALLBACK_FILES):
+        for fn in jitted:
+            for n in ast.walk(fn):
+                if (isinstance(n, ast.Call)
+                        and _call_name(n) in _CALLBACK_NAMES):
+                    out.append(Finding(
+                        PASS, "host-callback-tap",
+                        f"{filename}:{n.lineno}",
+                        f"{_call_name(n)}() inside jit-reachable "
+                        f"'{fn.name}': host callbacks in traced code "
+                        "belong to repro.obs.quantstats.tap (telemetry) "
+                        "or the offload callback store — an untracked "
+                        "callback evades the jaxpr byte audit"))
+
+    # obs-tap-dataflow: no obs taps on the residual/stash dataflow path
+    if filename.endswith(_DATAFLOW_FILES):
+        for n in ast.walk(tree):
+            if isinstance(n, ast.Call) and _call_name(n) == "tap":
+                out.append(Finding(
+                    PASS, "obs-tap-dataflow", f"{filename}:{n.lineno}",
+                    "obs tap() on the residual/stash dataflow path: "
+                    "telemetry must run as a separate probe pass so "
+                    "obs-on training jaxprs stay bit-identical to "
+                    "obs-off"))
 
     # sr-seed-reuse: identical literal seed-helper calls in one function
     for n in ast.walk(tree):

@@ -158,6 +158,57 @@ def test_sr_seed_reuse_detected():
     assert [f.rule for f in got] == ["sr-seed-reuse"]
 
 
+def test_host_callback_outside_obs_tap_detected():
+    """A raw jax.debug.callback inside jitted code is a finding unless it
+    lives in the sanctioned homes (the obs tap or the offload store)."""
+    src = ("import jax\n\n"
+           "@jax.jit\ndef step(x):\n"
+           "    jax.debug.callback(print, x)\n    return x\n")
+    got = seed_lint.lint_source(src, "repro/graph/train.py")
+    assert [f.rule for f in got] == ["host-callback-tap"]
+    # same source is sanctioned in the obs telemetry module and the
+    # offload callback host store
+    assert seed_lint.lint_source(src, "repro/obs/quantstats.py") == []
+    assert seed_lint.lint_source(src, "repro/offload/engine.py") == []
+
+
+def test_host_callback_variants_detected():
+    src = ("import jax\n\n"
+           "def inner(x):\n"
+           "    return jax.pure_callback(abs, x, x)\n\n"
+           "out = jax.jit(inner)\n")
+    got = seed_lint.lint_source(src, "repro/core/quant.py")
+    assert [f.rule for f in got] == ["host-callback-tap"]
+
+
+def test_obs_tap_on_dataflow_path_detected():
+    """tap() must never appear on the residual/stash dataflow path — a
+    tap there puts the telemetry callback inside the training jaxpr and
+    forfeits obs-on/obs-off bit-identity."""
+    src = ("from repro.obs.quantstats import tap\n\n"
+           "def f_fwd(x):\n    tap(print, x)\n    return x\n")
+    got = seed_lint.lint_source(src, "repro/engine/forward.py")
+    assert [f.rule for f in got] == ["obs-tap-dataflow"]
+    for fname in ("repro/offload/engine.py", "repro/offload/arena.py"):
+        assert ["obs-tap-dataflow"] == [
+            f.rule for f in seed_lint.lint_source(src, fname)]
+    # outside the dataflow path (and outside jit) a tap is fine
+    assert seed_lint.lint_source(src, "repro/engine/runner.py") == []
+
+
+def test_obs_calibration_needs_telemetry_channel():
+    from repro.obs import ObsPolicy
+
+    plan = ExecutionPlan(
+        precision=PrecisionPolicy(kind="autoprec", bit_budget=2.0,
+                                  calibration="obs"))
+    got = plan_verify.verify_combination(plan)
+    assert [f.rule for f in got] == ["obs-calibration"]
+    ok = dataclasses.replace(
+        plan, obs=ObsPolicy(enabled=True, quant_stats=True))
+    assert plan_verify.verify_combination(ok) == []
+
+
 def test_repo_seed_discipline_is_clean():
     assert seed_lint.run() == []
 
