@@ -18,7 +18,7 @@ def main() -> None:
     from benchmarks import (autoprec, fig3_variance_surface,
                             fig5_vm_dimensionality, gnn_batched, gnn_dist,
                             kernel_throughput, lm_act_compression, offload,
-                            roofline, table1_gnn, table2_distribution)
+                            roofline, serve, table1_gnn, table2_distribution)
 
     suites = [
         ("fig3", fig3_variance_surface.main),
@@ -31,6 +31,7 @@ def main() -> None:
         ("gnn_dist", gnn_dist.main),  # writes BENCH_gnn_dist.json
         ("autoprec", autoprec.main),  # writes BENCH_autoprec.json
         ("offload", offload.main),  # writes BENCH_offload.json
+        ("serve", serve.main),  # writes BENCH_serve.json
         ("roofline", roofline.main),
     ]
     trace_out = os.environ.get("REPRO_TRACE_OUT")

@@ -18,10 +18,14 @@ Exit status: 0 when every metric holds, 1 with a per-metric report
 otherwise.  A metric missing from either side fails loudly — schema
 drift must be a conscious baseline refresh, not a silent skip.
 
-One gate is absolute rather than baseline-relative: the observability
-layer's epoch-time overhead (``BENCH_gnn_batched.json``'s ``obs``
-record) must keep obs-on within ``--obs-overhead-limit`` (default 1.05)
-of obs-off.
+Three gates are absolute rather than baseline-relative: the
+observability layer's epoch-time overhead (``BENCH_gnn_batched.json``'s
+``obs`` record) must keep obs-on within ``--obs-overhead-limit``
+(default 1.05) of obs-off, and the serving engine
+(``BENCH_serve.json``) must hold continuous batching at
+``--serve-speedup-min`` (default 1.3) x fixed-batch tokens/sec and the
+bits=4 KV arena at ``--serve-bytes-ratio-min`` (default 3.0) x smaller
+than uncompressed f32 with the bits=8 parity probe in tolerance.
 """
 from __future__ import annotations
 
@@ -95,11 +99,28 @@ def _compressor_metrics(d: dict) -> dict:
     return out
 
 
+def _serve_metrics(d: dict) -> dict:
+    """``BENCH_serve.json``: per-arm us/token and p99 latency are
+    wall-clock ("time"); the KV arena footprints are the deterministic
+    page-pool model ("bytes", strict).  The speedup / compression /
+    parity contracts are absolute gates (``check_serve_contract``), not
+    baseline diffs."""
+    out = {}
+    for mode in ("fixed", "continuous"):
+        out[f"{mode}/us_per_token"] = (d[mode]["us_per_token"], "time")
+        out[f"{mode}/p99_latency_ms"] = (d[mode]["p99_latency_ms"], "time")
+    for r in d["kv_sweep"]:
+        out[f"kv{r['bits']}/us_per_token"] = (r["us_per_token"], "time")
+        out[f"kv{r['bits']}/kv_pool_bytes"] = (r["kv_pool_bytes"], "bytes")
+    return out
+
+
 EXTRACTORS = {
     "BENCH_gnn_batched.json": _gnn_batched_metrics,
     "BENCH_gnn_dist.json": _gnn_dist_metrics,
     "BENCH_offload.json": _offload_metrics,
     "BENCH_compressor.json": _compressor_metrics,
+    "BENCH_serve.json": _serve_metrics,
 }
 
 
@@ -160,6 +181,49 @@ def check_obs_overhead(fresh_dir: Path, limit: float) -> list[str]:
     return []
 
 
+def check_serve_contract(fresh_dir: Path, speedup_min: float,
+                         bytes_ratio_min: float) -> list[str]:
+    """Absolute gates on the serving engine: the fresh
+    ``BENCH_serve.json`` must show continuous batching >=
+    ``speedup_min`` x fixed-batch tokens/sec on the head-of-line
+    blocking load, the bits=4 KV arena >= ``bytes_ratio_min`` x smaller
+    than the same pool uncompressed f32, and the bits=8-vs-16 logit
+    parity probe passing (exact prefill step, bounded first quantized
+    read).  Absolute, not baseline-relative — these are the paper's
+    serving claims, not drift checks."""
+    p = fresh_dir / "BENCH_serve.json"
+    if not p.exists():
+        return [f"serve-contract: benchmark did not produce {p}"]
+    d = json.loads(p.read_text())
+    fails = []
+    speedup = d["speedup_tokens_per_sec"]
+    if speedup < speedup_min:
+        fails.append(f"serve-contract: continuous/fixed tokens/sec "
+                     f"speedup {speedup:.2f} below the "
+                     f"{speedup_min:.2f} minimum")
+    else:
+        print(f"ok  BENCH_serve.json:speedup_tokens_per_sec: "
+              f"{speedup:.2f} (>= {speedup_min:.2f} absolute minimum)")
+    ratio = d["bytes_gate"]["bits4_f32_ratio"]
+    if ratio < bytes_ratio_min:
+        fails.append(f"serve-contract: bits=4 KV f32/pool byte ratio "
+                     f"{ratio:.2f} below the {bytes_ratio_min:.2f} minimum")
+    else:
+        print(f"ok  BENCH_serve.json:bits4_f32_ratio: {ratio:.2f} "
+              f"(>= {bytes_ratio_min:.2f} absolute minimum)")
+    par = d["parity"]
+    if not par["ok"]:
+        fails.append(f"serve-contract: bits=8 parity probe failed "
+                     f"(prefill_diff={par['prefill_logit_diff']:.3g} "
+                     f"step1_diff={par['step1_logit_diff']:.3g} "
+                     f"tol={par['tol']})")
+    else:
+        print(f"ok  BENCH_serve.json:parity: prefill exact, "
+              f"step1_diff={par['step1_logit_diff']:.3g} "
+              f"(< {par['tol']} tol)")
+    return fails
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir", type=Path, required=True,
@@ -175,11 +239,19 @@ def main(argv=None) -> int:
     ap.add_argument("--obs-overhead-limit", type=float, default=1.05,
                     help="absolute ceiling on the obs-on/obs-off epoch "
                          "time ratio reported by BENCH_gnn_batched.json")
+    ap.add_argument("--serve-speedup-min", type=float, default=1.3,
+                    help="absolute floor on continuous/fixed tokens/sec "
+                         "speedup reported by BENCH_serve.json")
+    ap.add_argument("--serve-bytes-ratio-min", type=float, default=3.0,
+                    help="absolute floor on the bits=4 KV f32/compressed "
+                         "byte ratio reported by BENCH_serve.json")
     args = ap.parse_args(argv)
     tt = args.time_threshold if args.time_threshold is not None \
         else args.threshold
     failures = compare(args.fresh_dir, args.baseline_dir, args.threshold, tt)
     failures += check_obs_overhead(args.fresh_dir, args.obs_overhead_limit)
+    failures += check_serve_contract(args.fresh_dir, args.serve_speedup_min,
+                                     args.serve_bytes_ratio_min)
     if failures:
         print("\nBENCH REGRESSIONS:", file=sys.stderr)
         for f in failures:

@@ -4,7 +4,8 @@ Default: the §Roofline table in EXPERIMENTS.md from results/dryrun.
 
 ``--bench``: refresh the committed ``BENCH_gnn_batched.json`` /
 ``BENCH_gnn_dist.json`` / ``BENCH_offload.json`` /
-``BENCH_autoprec.json`` / ``BENCH_compressor.json`` baselines by re-running the plan-routed GNN
+``BENCH_autoprec.json`` / ``BENCH_serve.json`` /
+``BENCH_compressor.json`` baselines by re-running the plan-routed GNN
 benchmark suites (each lowers explicit
 :class:`repro.engine.plan.ExecutionPlan` objects through ``engine.run``,
 so the refreshed numbers describe exactly what the engine executes) plus
@@ -43,7 +44,8 @@ def refresh_bench_baselines():
     BENCH_*.json in place (the bench-regression gate's baselines).  The
     fused tile autotune cache is re-measured first so the kernel sweep's
     fused rows record the tiles training would actually dispatch with."""
-    from benchmarks import autoprec, gnn_batched, kernel_throughput, offload
+    from benchmarks import (autoprec, gnn_batched, kernel_throughput,
+                            offload, serve)
     from repro.kernels import autotune
 
     print("re-measuring fused tile autotune cache ...")
@@ -52,6 +54,7 @@ def refresh_bench_baselines():
     print(f"  {len(cache)} cache entries -> {autotune.cache_path()}")
     for tag, fn in [("gnn_batched", gnn_batched.main),
                     ("autoprec", autoprec.main), ("offload", offload.main),
+                    ("serve", serve.main),
                     ("kernel", kernel_throughput.main)]:
         print(f"refreshing {tag} baseline ...")
         for name, us, derived in fn():

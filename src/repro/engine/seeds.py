@@ -80,6 +80,30 @@ def step_seed(step):
     return jnp.asarray(step).astype(jnp.uint32) * jnp.uint32(KNUTH_MULT)
 
 
+#: Per-slot seed stride for the serving KV cache: decorrelates two slots
+#: that sit at the same absolute position (next prime after the ordinal
+#: scheme's 7919 so the streams never alias).
+KV_SLOT_STRIDE = 7927
+
+
+def kv_seed(pos, slot, li, field):
+    """SR seed for one serving KV-cache write.
+
+    ``pos`` is the token's absolute position (prompt + generated), ``slot``
+    the scheduler slot, ``li`` the layer, ``field`` 0 for K / 1 for V.
+    The base stream is the LM step hash of the position (so a request
+    replayed through a different admission order quantizes identically as
+    long as it lands in the same slot); slot and (layer, field) offsets
+    draw decorrelated counter-PRNG streams.  All arguments may be traced —
+    the decode step derives seeds inside its layer scan.
+    """
+    base = step_seed(pos) + \
+        jnp.asarray(slot, jnp.uint32) * jnp.uint32(KV_SLOT_STRIDE)
+    off = (jnp.asarray(li, jnp.uint32) * jnp.uint32(2)
+           + jnp.asarray(field, jnp.uint32)) * jnp.uint32(LAYER_SEED_STRIDE)
+    return base + off
+
+
 def probe_seeds(seed: int):
     """Two decorrelated uint32 seeds for the autoprec two-seed grad probe."""
     h = seed * _PROBE_MULT

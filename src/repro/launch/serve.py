@@ -1,12 +1,20 @@
-"""Batched serving launcher: prefill queue + greedy decode loop.
+"""Serving launcher: continuous-batching engine over the block-quantized
+paged KV cache.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \\
-      --requests 8 --prompt-len 32 --gen-len 64
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \\
+      --requests 8 --prompt-len 32 --gen-len 64 --kv-bits 4
 
-Production notes: on a TPU mesh the same step functions lower with the
-decode cache shardings from ``parallel.sharding.cache_pspecs`` (what the
-dry-run exercises at 32k/500k context); this launcher runs the identical
-code path on local devices with reduced configs.
+Attention-cache families (dense / vlm / moe) serve through
+:class:`repro.serving.ServeEngine`: slot-based continuous batching with
+page-level admission control, KV written block-quantized
+(``--kv-bits {2,4,8}``; 16 = raw bf16) under an offload placement policy
+(``--kv-policy``).  ``--mode fixed`` recovers the legacy sequential
+fixed-batch loop as a scheduler configuration — the baseline
+``benchmarks/serve.py`` gates the continuous engine against.
+
+SSM / hybrid / enc-dec state caches are not paged-KV shaped; they decode
+through the legacy fixed-batch loop below (which accumulates tokens
+device-side and transfers once per batch — no per-token host round trip).
 """
 from __future__ import annotations
 
@@ -21,74 +29,29 @@ from repro.configs import get, reduce_for_smoke
 from repro.data import batch_for_step
 from repro.launch.steps import make_serve_step
 from repro.models import Model
+from repro.obs import ObsPolicy
 from repro.obs.trace import stopwatch
+from repro.serving import KV_FAMILIES, KVCacheConfig, Request, ServeEngine
 
 
-def _stash_prompt_context(params, prompts, policy: str) -> dict:
-    """Serving-side arena exercise: park the batch's prompt embeddings in
-    a compressed stash arena under ``policy`` and read them back.
-
-    This is the read path a compressed prompt-context cache would use
-    (stash at prefill, decompress on a later turn); it drives
-    ``stash_write`` → offload → prefetch → ``stash_read`` → decompress
-    end-to-end outside the training engines.
-    """
-    from repro.core.compressor import CompressionConfig, compress, decompress
-    from repro.engine.seeds import sr_seed
-    from repro.offload import arena, engine
-
-    h0 = jnp.take(params["embed"], jnp.asarray(prompts),
-                  axis=0).astype(jnp.float32)
-    comp = CompressionConfig(bits=2, group_size=256)
-    plan = arena.plan_stashes((tuple(h0.shape),), (comp,))
-    writer = engine.make_writer(plan, policy, jnp.uint32(0x5E12))
-    writer.put_ct(0, compress(h0, comp, sr_seed(0)))
-    reader = engine.make_reader(plan, policy, writer.residual())
-    reader.prefetch(0)
-    h_rec = decompress(reader.get_ct(0))
-    err = float(jnp.mean((h_rec - h0) ** 2) / jnp.maximum(
-        jnp.mean(h0 ** 2), 1e-12))
-    return {"policy": policy, "arena_bytes": plan.total_bytes,
-            "full_bytes": int(h0.nbytes), "rel_mse": err,
-            "shape_ok": h_rec.shape == h0.shape}
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--offload", default=None,
-                    choices=["device", "host", "pinned-paged"],
-                    help="also stash each batch's prompt embeddings in a "
-                         "compressed arena under this policy and read "
-                         "them back (exercises the serving-side arena "
-                         "read path)")
-    args = ap.parse_args(argv)
-
-    cfg = get(args.arch)
-    if args.smoke:
-        cfg = reduce_for_smoke(cfg)
-    cfg = dataclasses.replace(cfg, act_mode="none")
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    serve = jax.jit(make_serve_step(model))
+def _legacy_loop(model, params, args):
+    """Fixed-batch greedy decode for the non-attention families: tokens
+    accumulate in a device-side buffer updated in-place each step and
+    transfer to the host once per batch."""
+    cfg = model.cfg
+    serve = jax.jit(make_serve_step(model), donate_argnums=(1,))
     max_seq = args.prompt_len + args.gen_len
+
+    @jax.jit
+    def append(buf, tok, i):
+        return buf.at[:, i].set(tok[:, 0])
 
     done, t_prefill, t_decode, n_decoded = 0, 0.0, 0.0, 0
     outputs = []
-    stash_report = None
     while done < args.requests:
-        n = min(args.batch, args.requests - done)
+        n = min(args.max_batch, args.requests - done)
         prompts = batch_for_step(cfg.vocab, n, args.prompt_len,
                                  step=done, seed=11)
-        if args.offload and stash_report is None:
-            stash_report = _stash_prompt_context(params, prompts,
-                                                 args.offload)
-            assert stash_report["shape_ok"], stash_report
         kwargs = {}
         if cfg.family == "encdec":
             kwargs["enc_embeds"] = jax.random.normal(
@@ -100,25 +63,96 @@ def main(argv=None):
             jax.block_until_ready(logits)
         t_prefill += sw.elapsed_s
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        gen = [np.asarray(tok)]
-        with stopwatch("serve/decode", batch=n,
-                       gen_len=args.gen_len) as sw:
-            for _ in range(args.gen_len - 1):
+        buf = jnp.zeros((n, args.gen_len), jnp.int32).at[:, 0].set(tok[:, 0])
+        with stopwatch("serve/decode", batch=n, gen_len=args.gen_len) as sw:
+            for i in range(1, args.gen_len):
                 tok, _, cache = serve(params, cache, tok)
-                gen.append(np.asarray(tok))
-            jax.block_until_ready(tok)
+                buf = append(buf, tok, i)
+            jax.block_until_ready(buf)
         t_decode += sw.elapsed_s
         n_decoded += (args.gen_len - 1) * n
-        outputs.append(np.concatenate(gen, axis=1))
+        outputs.append(np.asarray(buf))          # one transfer per batch
         done += n
-    print(f"served {done} requests: prefill {t_prefill:.2f}s total, "
-          f"decode {n_decoded / max(t_decode, 1e-9):.1f} tok/s")
-    if stash_report is not None:
-        print(f"prompt-context stash[{stash_report['policy']}]: "
-              f"{stash_report['arena_bytes']} B arena vs "
-              f"{stash_report['full_bytes']} B raw, "
-              f"rel_mse={stash_report['rel_mse']:.4f}")
-    return outputs
+    print(f"served {done} requests (legacy {cfg.family} loop): prefill "
+          f"{t_prefill:.2f}s total, decode "
+          f"{n_decoded / max(t_decode, 1e-9):.1f} tok/s")
+    return [row for batch in outputs for row in batch]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots (continuous) / batch size (fixed)")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--kv-bits", type=int, default=8, choices=[2, 4, 8, 16],
+                    help="KV cache width: 2/4/8 block-quantized, 16 raw bf16")
+    ap.add_argument("--kv-policy", default="device",
+                    choices=["device", "host", "pinned-paged"],
+                    help="page-pool placement (offload memory policies)")
+    ap.add_argument("--kv-group", type=int, default=64,
+                    help="quantization block size along the KV token row")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="tokens per KV page")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="physical pages in the pool (default: sized so "
+                         "max_batch full-horizon requests fit)")
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "fixed"],
+                    help="fixed = legacy sequential batch loop, as a "
+                         "scheduler configuration")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable scheduler/engine metrics "
+                         "(queue depth, occupancy, TTFT/TPOT, page residency)")
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    cfg = dataclasses.replace(cfg, act_mode="none")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    if cfg.family not in KV_FAMILIES:
+        return _legacy_loop(model, params, args)
+
+    pages_per_req = -(-(args.prompt_len + args.gen_len - 1)
+                      // args.page_tokens)
+    n_pages = args.kv_pages or args.max_batch * pages_per_req
+    kv = KVCacheConfig(bits=args.kv_bits, group_size=args.kv_group,
+                       policy=args.kv_policy, page_tokens=args.page_tokens,
+                       n_pages=n_pages)
+    engine = ServeEngine(model, params, kv=kv, max_batch=args.max_batch,
+                         max_prompt=args.prompt_len, gen_cap=args.gen_len,
+                         mode=args.mode,
+                         obs=ObsPolicy(enabled=True) if args.obs else None)
+    requests = [
+        Request(rid=i,
+                prompt=batch_for_step(cfg.vocab, 1, args.prompt_len,
+                                      step=i, seed=11)[0],
+                max_new=args.gen_len)
+        for i in range(args.requests)]
+    out = engine.run(requests)
+    print(f"served {args.requests - out['rejected']}/{args.requests} "
+          f"requests [{args.mode}, kv-bits={args.kv_bits}, "
+          f"{engine.mechanism}]: {out['tokens_per_sec']:.1f} tok/s, "
+          f"p50 {out['p50_latency_ms']:.0f} ms / "
+          f"p99 {out['p99_latency_ms']:.0f} ms, "
+          f"ttft {out['ttft_mean_ms']:.0f} ms, "
+          f"tpot {out['tpot_mean_ms']:.1f} ms")
+    print(f"kv pool: {out['kv_pool_bytes']} B "
+          f"({out['kv_f32_pool_bytes']} B as f32, "
+          f"{out['kv_f32_pool_bytes'] / max(out['kv_pool_bytes'], 1):.1f}x)")
+    if args.obs:
+        snap = engine.session.summary().get("metrics", {})
+        for key in ("serve/admitted", "serve/completed", "serve/rejected",
+                    "serve/decode_steps", "serve/pages_in_use"):
+            if key in snap:
+                print(f"  {key}: {snap[key]}")
+    return [r.tokens for r in out["results"] if r.status == "done"]
 
 
 if __name__ == "__main__":

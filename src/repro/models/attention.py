@@ -133,31 +133,25 @@ def attention_block(x, p, cfg, *, causal=True, k_chunk=1024):
     return out @ p["wo"]
 
 
-def attention_decode(x, p, cfg, cache_k, cache_v, pos):
-    """One-token decode. x (B,1,D); cache (B,Smax,Hkv,Dh); pos (B,) int32.
+def decode_attend(q, kf, vf, pos, *, out_dtype):
+    """Single-token grouped-head attention over a materialized KV window.
+
+    q (B,1,Hq,Dh) (rope applied); kf/vf (B,S,Hkv,Dh) float32 (cache may be
+    padded past ``pos``); pos (B,) int32 — entries with index > pos mask
+    out.  Returns (B, 1, Hq*Dh) in ``out_dtype`` (pre-``wo``).
 
     DIRECT grouped-head attention (no KV repeat, no chunk scan): with the
     cache sequence dim sharded over ``model``, scores stay sharded and only
     the (B,Hkv,G,1)-sized softmax stats and output partials all-reduce —
     vs. all-gathering the full cache per layer (§Perf iteration: cut decode
     collective bytes by ~3 orders of magnitude).
-
-    Returns (out (B,1,D), new_k, new_v).
     """
-    b = x.shape[0]
-    positions = pos[:, None]
-    q, k, v = qkv_project(x, p, cfg, positions)
-    cache_k = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
-        c, u, (i, 0, 0)))(cache_k, k, pos)
-    cache_v = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
-        c, u, (i, 0, 0)))(cache_v, v, pos)
-    smax = cache_k.shape[1]
-    hkv = cfg.n_kv_heads
-    g = cfg.n_heads // hkv
-    scale = 1.0 / np.sqrt(cfg.d_head)
-    qg = (q * scale).reshape(b, hkv, g, cfg.d_head).astype(jnp.float32)
-    kf = cache_k.astype(jnp.float32)                      # (B,S,Hkv,Dh)
-    vf = cache_v.astype(jnp.float32)
+    b, _, hq, dh = q.shape
+    hkv = kf.shape[2]
+    g = hq // hkv
+    smax = kf.shape[1]
+    scale = 1.0 / np.sqrt(dh)
+    qg = (q * scale).reshape(b, hkv, g, dh).astype(jnp.float32)
     s = jnp.einsum("bkgd,bskd->bkgs", qg, kf)             # (B,Hkv,G,S)
     valid = jnp.arange(smax)[None, :] <= pos[:, None]     # (B,S)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
@@ -165,7 +159,63 @@ def attention_decode(x, p, cfg, cache_k, cache_v, pos):
     pexp = jnp.exp(s - m)
     l = pexp.sum(-1, keepdims=True)
     out = jnp.einsum("bkgs,bskd->bkgd", pexp / l, vf)     # (B,Hkv,G,Dh)
-    out = out.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+    return out.reshape(b, 1, hq * dh).astype(out_dtype)
+
+
+def decode_attend_paged(q, pos, n_chunks: int, fetch_chunk, *, n_kv_heads,
+                        out_dtype):
+    """Single-token online-softmax attention over lazily fetched KV chunks.
+
+    The serving engine's quantized paged KV cache reads through this:
+    ``fetch_chunk(j) -> (kf, vf, kv_pos)`` with kf/vf (B,C,Hkv,Dh) float32
+    and kv_pos (C,) absolute positions — the caller dequantizes exactly one
+    page per iteration, so raw-f32 KV for the other pages never
+    materializes.  Chunk 0 must contain position 0 (always valid), so the
+    running max never stays at ``NEG_INF`` after the first iteration.
+    """
+    b, _, hq, dh = q.shape
+    hkv = n_kv_heads
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(dh)
+    qg = (q * scale).reshape(b, hkv, g, dh).astype(jnp.float32)
+
+    def body(carry, j):
+        m, l, acc = carry
+        kf, vf, kv_pos = fetch_chunk(j)
+        s = jnp.einsum("bkgd,bckd->bkgc", qg, kf)         # (B,Hkv,G,C)
+        valid = kv_pos[None, :] <= pos[:, None]           # (B,C)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgc,bckd->bkgd", p, vf)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, hkv, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g), jnp.float32),
+            jnp.zeros((b, hkv, g, dh), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, hq * dh).astype(out_dtype)
+
+
+def attention_decode(x, p, cfg, cache_k, cache_v, pos):
+    """One-token decode. x (B,1,D); cache (B,Smax,Hkv,Dh); pos (B,) int32.
+
+    Projects q/k/v, writes the new KV row at ``pos``, and attends via
+    :func:`decode_attend` (the shared score/softmax core the serving
+    engine's paged cache also feeds).  Returns (out (B,1,D), new_k, new_v).
+    """
+    positions = pos[:, None]
+    q, k, v = qkv_project(x, p, cfg, positions)
+    cache_k = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0, 0)))(cache_k, k, pos)
+    cache_v = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0, 0)))(cache_v, v, pos)
+    kf = cache_k.astype(jnp.float32)                      # (B,S,Hkv,Dh)
+    vf = cache_v.astype(jnp.float32)
+    out = decode_attend(q, kf, vf, pos, out_dtype=x.dtype)
     return out @ p["wo"], cache_k, cache_v
 
 

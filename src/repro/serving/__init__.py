@@ -1,0 +1,14 @@
+"""Continuous-batching serving engine over a block-wise-quantized paged
+KV cache (ISSUE 10): scheduler + paged pool + jitted decode/prefill.
+"""
+from repro.serving.engine import (KV_FAMILIES, RequestResult, ServeEngine,
+                                  make_decode_fn, make_prefill_fn)
+from repro.serving.kvcache import (KV_BITS, KVCacheConfig, KVPageLayout,
+                                   PageAllocator, plan_kv_layout)
+from repro.serving.scheduler import MODES, Request, Scheduler, SlotState
+
+__all__ = [
+    "KV_BITS", "KV_FAMILIES", "KVCacheConfig", "KVPageLayout", "MODES",
+    "PageAllocator", "Request", "RequestResult", "Scheduler", "ServeEngine",
+    "SlotState", "make_decode_fn", "make_prefill_fn", "plan_kv_layout",
+]

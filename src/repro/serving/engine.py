@@ -1,0 +1,369 @@
+"""ServeEngine: continuous-batching greedy decode over the paged,
+block-quantized KV cache.
+
+One jitted decode step serves every occupied slot at once (static
+``max_batch`` shapes, so it compiles exactly once per engine): embed the
+slots' last tokens, scan the layer stack writing each new KV row into
+its page — quantized through the paper's block-wise SR path for
+``bits<16`` — and attend either through the chunked online-softmax paged
+read (:func:`repro.models.attention.decode_attend_paged`, one page
+dequantized per iteration) or the dense gather
+(:func:`~repro.models.attention.decode_attend`, bits=16 raw pages,
+bit-identical to the legacy cache).  Generated tokens accumulate in a
+preallocated device-side ``(max_batch, gen_cap)`` buffer; the host
+transfers a request's row **once**, on completion — no per-token
+``np.asarray`` round trip in the timed loop.
+
+Prefill runs per admission group (same-length prompts batch together),
+writes the prompt's KV into the freshly reserved pages via
+:func:`repro.serving.kvcache.write_prompt` (the compressed prompt-context
+stash), and seats the slot state device-side.  Host-side bookkeeping
+(scheduler mirrors, page tables) advances deterministically without
+device syncs.
+
+Observability: queue depth / batch occupancy / page residency and
+per-request TTFT/TPOT histograms stream into a
+:class:`repro.obs.session.ObsSession` built from the caller's
+``ObsPolicy``; the run summary always carries the derived percentiles,
+obs on or off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.seeds import kv_seed
+from repro.models import attention as attn
+from repro.models import moe as moemod
+from repro.models.layers import rmsnorm, swiglu
+from repro.obs.session import ObsSession
+from repro.serving import kvcache
+from repro.serving.kvcache import KVCacheConfig, plan_kv_layout
+from repro.serving.scheduler import MODES, Request, Scheduler
+
+#: Families the paged KV cache serves (attention KV caches); SSM/hybrid
+#: state caches decode through the legacy loop in ``launch.serve``.
+KV_FAMILIES = ("dense", "vlm", "moe")
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    status: str                      # "done" | "rejected"
+    tokens: np.ndarray | None = None
+    reason: str = ""
+    ttft_s: float = 0.0
+    tpot_s: float = 0.0
+    latency_s: float = 0.0
+
+
+def make_decode_fn(model, layout, *, gen_cap: int, collect_logits: bool):
+    """Build the jitted one-token step for every slot: (params, pool,
+    page_table, state) -> (pool, state).  Mirrors ``Model.decode_step``'s
+    layer math exactly — only the KV storage differs."""
+    cfg = model.cfg
+
+    def step(params, pool, page_table, state):
+        tokens, pos, active = state["tokens"], state["pos"], state["active"]
+        B = tokens.shape[0]
+        slot_ids = jnp.arange(B)
+        h = jnp.take(params["embed"], tokens, axis=0)
+
+        def body(carry, xs):
+            hh = carry
+            lp, pool_l, li = xs
+            x = rmsnorm(hh, lp["ln1"])
+            q, k, v = attn.qkv_project(x, lp["attn"], cfg, pos[:, None])
+            seed_k = kv_seed(pos, slot_ids, li, 0)
+            seed_v = kv_seed(pos, slot_ids, li, 1)
+            pool_l = kvcache.write_token(pool_l, layout, page_table, pos,
+                                         active, k[:, 0], v[:, 0],
+                                         seed_k, seed_v)
+            if layout.quantized:
+                fetch = kvcache.make_page_fetch(pool_l, layout, page_table)
+                a = attn.decode_attend_paged(
+                    q, pos, page_table.shape[1], fetch,
+                    n_kv_heads=cfg.n_kv_heads, out_dtype=x.dtype)
+            else:
+                kf, vf = kvcache.gather_kv_raw(pool_l, layout, page_table)
+                a = attn.decode_attend(q, kf, vf, pos, out_dtype=x.dtype)
+            hh = hh + a @ lp["attn"]["wo"]
+            if cfg.family == "moe":
+                if cfg.dense_residual:
+                    m = lp["mlp"]
+                    hh = hh + swiglu(rmsnorm(hh, lp["ln3"]), m["w_gate"],
+                                     m["w_up"], m["w_down"])
+                y, _ = moemod.moe_ffn(rmsnorm(hh, lp["ln2"]), lp["moe"],
+                                      n_experts=cfg.n_experts,
+                                      top_k=cfg.top_k,
+                                      capacity_factor=cfg.moe_capacity_factor)
+                hh = hh + y
+            else:
+                m = lp["mlp"]
+                hh = hh + swiglu(rmsnorm(hh, lp["ln2"]), m["w_gate"],
+                                 m["w_up"], m["w_down"])
+            return hh, pool_l
+
+        h, pool = jax.lax.scan(
+            body, h, (params["layers"], pool,
+                      jnp.arange(cfg.n_layers, dtype=jnp.uint32)))
+        h = rmsnorm(h, params["final_norm"])
+        logits = (h @ params["lm_head"]).astype(jnp.float32)[:, -1]  # (B,V)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        gen = state["gen"]
+        row = jnp.arange(B)
+        col = jnp.where(active, gen, gen_cap)          # gen_cap → dropped
+        new = dict(state)
+        new["out"] = state["out"].at[row, col].set(next_tok, mode="drop")
+        new["tokens"] = jnp.where(active[:, None], next_tok[:, None], tokens)
+        new["pos"] = pos + active.astype(pos.dtype)
+        new["gen"] = gen + active.astype(gen.dtype)
+        new["active"] = active & (new["gen"] < state["target"])
+        if collect_logits:
+            new["logits"] = state["logits"].at[row, col].set(
+                logits, mode="drop")
+        return pool, new
+
+    return step
+
+
+def make_prefill_fn(model, layout, *, collect_logits: bool):
+    """Build the jitted admission step: prefill a same-length prompt
+    group, stash its KV into the reserved pages, seat the slots."""
+
+    def prefill(params, pool, state, prompts, phys_pages, slots, targets):
+        S = prompts.shape[1]
+        T = layout.page_tokens
+        pad = phys_pages.shape[1] * T           # prompt pages, page-aligned
+        logits, cache = model.prefill(params, prompts, max_seq=pad)
+        pool = kvcache.write_prompt(pool, layout, cache["k"], cache["v"],
+                                    phys_pages, slots)
+        tok0 = jnp.argmax(logits, -1).astype(jnp.int32)          # (n,)
+        new = dict(state)
+        new["tokens"] = state["tokens"].at[slots, 0].set(tok0)
+        new["pos"] = state["pos"].at[slots].set(S)
+        new["active"] = state["active"].at[slots].set(True)
+        new["target"] = state["target"].at[slots].set(targets)
+        new["out"] = state["out"].at[slots, 0].set(tok0)
+        new["gen"] = state["gen"].at[slots].set(1)
+        if collect_logits:
+            new["logits"] = state["logits"].at[slots, 0].set(
+                logits.astype(jnp.float32))
+        return pool, new
+
+    return prefill
+
+
+class ServeEngine:
+    """Continuous-batching serving engine over the paged KV cache.
+
+    ``mode="fixed"`` turns the same machinery into the legacy sequential
+    fixed-batch loop (admission barriers, see
+    :class:`repro.serving.scheduler.Scheduler`).
+    """
+
+    def __init__(self, model, params, *, kv: KVCacheConfig | None = None,
+                 max_batch: int = 4, max_queue: int = 64,
+                 max_prompt: int = 64, gen_cap: int = 64,
+                 mode: str = "continuous", obs=None,
+                 collect_logits: bool = False):
+        cfg = model.cfg
+        if cfg.family not in KV_FAMILIES:
+            raise ValueError(
+                f"paged-KV serving covers the attention-cache families "
+                f"{KV_FAMILIES}; family={cfg.family!r} decodes through the "
+                "legacy loop in launch.serve")
+        if mode not in MODES:
+            raise ValueError(f"mode={mode!r} not in {MODES}")
+        self.model, self.params, self.mode = model, params, mode
+        kv = kv or KVCacheConfig()
+        self.layout = plan_kv_layout(kv, n_layers=cfg.n_layers,
+                                     n_kv_heads=cfg.n_kv_heads,
+                                     d_head=cfg.d_head)
+        T = self.layout.page_tokens
+        self.max_prompt, self.gen_cap = max_prompt, gen_cap
+        self.max_pages_per_slot = -(-(max_prompt + gen_cap - 1) // T)
+        self.max_batch = max_batch
+        self.collect_logits = collect_logits
+        self.session = obs if isinstance(obs, ObsSession) \
+            else ObsSession.from_policy(obs)
+        pool = kvcache.init_kv_pool(self.layout)
+        self.pool, self.mechanism = kvcache.place_kv_pool(pool, self.layout)
+        self.alloc = kvcache.PageAllocator(kv.n_pages)
+        self.sched = Scheduler(max_batch=max_batch, page_tokens=T,
+                               allocator=self.alloc, mode=mode,
+                               max_queue=max_queue, max_prompt=max_prompt,
+                               max_new_cap=gen_cap)
+        self._decode = jax.jit(
+            make_decode_fn(model, self.layout, gen_cap=gen_cap,
+                           collect_logits=collect_logits),
+            donate_argnums=(1, 3))
+        self._prefill = jax.jit(
+            make_prefill_fn(model, self.layout,
+                            collect_logits=collect_logits),
+            donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------ plumbing
+    def _init_state(self) -> dict:
+        B, G = self.max_batch, self.gen_cap
+        st = {"tokens": jnp.zeros((B, 1), jnp.int32),
+              "pos": jnp.zeros((B,), jnp.int32),
+              "active": jnp.zeros((B,), bool),
+              "target": jnp.zeros((B,), jnp.int32),
+              "out": jnp.zeros((B, G), jnp.int32),
+              "gen": jnp.zeros((B,), jnp.int32)}
+        if self.collect_logits:
+            st["logits"] = jnp.zeros((B, G, self.model.cfg.vocab),
+                                     jnp.float32)
+        return st
+
+    def _admit_group(self, group, state, page_table_np):
+        """Prefill one same-prompt-length admission group and seat it."""
+        m = self.session
+        S = group[0][1].prompt.shape[0]
+        npg_prompt = -(-S // self.layout.page_tokens)
+        slots = np.asarray([si for si, _, _ in group], np.int32)
+        prompts = np.stack([req.prompt for _, req, _ in group]).astype(
+            np.int32)
+        targets = np.asarray([req.max_new for _, req, _ in group], np.int32)
+        phys = np.full((len(group), npg_prompt), self.layout.null_page,
+                       np.int32)
+        for gi, (si, _, pages) in enumerate(group):
+            page_table_np[si, :] = self.layout.null_page
+            page_table_np[si, :len(pages)] = pages
+            phys[gi, :] = pages[:npg_prompt]
+        with m.span("serve/prefill", batch=len(group), prompt_len=int(S)):
+            self.pool, state = self._prefill(
+                self.params, self.pool, state, jnp.asarray(prompts),
+                jnp.asarray(phys), jnp.asarray(slots), jnp.asarray(targets))
+            jax.block_until_ready(state["tokens"])
+        now = time.perf_counter()
+        for si, req, _ in group:
+            slot = self.sched.slots[si]
+            slot.gen = 1
+            slot.t_first = now
+        m.counter("serve/prefill_tokens").inc(int(prompts.size))
+        return state
+
+    # ------------------------------------------------------------ main run
+    def run(self, requests) -> dict:
+        """Drive a request list (with step-indexed arrivals) to completion;
+        returns per-request results plus throughput/latency metrics."""
+        with self.session.activate():
+            return self._run(list(requests))
+
+    def _run(self, requests) -> dict:
+        m = self.session
+        B, maxp = self.max_batch, self.max_pages_per_slot
+        state = self._init_state()
+        page_table_np = np.full((B, maxp), self.layout.null_page, np.int32)
+        page_table = jnp.asarray(page_table_np)
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        results: dict[int, RequestResult] = {}
+        arrival_t: dict[int, float] = {}
+        step_idx, total_gen, decode_steps = 0, 0, 0
+        logits_rows: dict[int, np.ndarray] = {}
+        t0 = time.perf_counter()
+
+        def completions(state):
+            nonlocal total_gen, page_table
+            dirty = False
+            for si in range(B):
+                slot = self.sched.slots[si]
+                if slot is None or not slot.done:
+                    continue
+                toks = np.asarray(state["out"][si, :slot.max_new])
+                if self.collect_logits:
+                    logits_rows[slot.rid] = np.asarray(
+                        state["logits"][si, :slot.max_new])
+                t_done = time.perf_counter()
+                ttft = slot.t_first - arrival_t[slot.rid]
+                tpot = ((t_done - slot.t_first) / (slot.max_new - 1)
+                        if slot.max_new > 1 else 0.0)
+                results[slot.rid] = RequestResult(
+                    rid=slot.rid, status="done", tokens=toks, ttft_s=ttft,
+                    tpot_s=tpot, latency_s=t_done - arrival_t[slot.rid])
+                total_gen += slot.max_new
+                self.sched.complete(si)
+                page_table_np[si, :] = self.layout.null_page
+                dirty = True
+                m.counter("serve/completed").inc()
+                m.histogram("serve/ttft_ms").observe(ttft * 1e3)
+                m.histogram("serve/tpot_ms").observe(tpot * 1e3)
+            if dirty:
+                page_table = jnp.asarray(page_table_np)
+
+        while True:
+            while pending and pending[0].arrival <= step_idx:
+                req = pending.popleft()
+                arrival_t[req.rid] = time.perf_counter()
+                ok, reason = self.sched.submit(req)
+                if not ok:
+                    results[req.rid] = RequestResult(
+                        rid=req.rid, status="rejected", reason=reason)
+                    m.counter("serve/rejected").inc()
+            m.histogram("serve/queue_depth").observe(len(self.sched.queue))
+            admitted = self.sched.admit()
+            if admitted:
+                by_len: dict[int, list] = {}
+                for entry in admitted:
+                    by_len.setdefault(len(entry[1].prompt), []).append(entry)
+                for group in by_len.values():
+                    state = self._admit_group(group, state, page_table_np)
+                page_table = jnp.asarray(page_table_np)
+                m.counter("serve/admitted").inc(len(admitted))
+                m.gauge("serve/pages_in_use").max(self.alloc.used_pages)
+            completions(state)
+            if self.sched.active_count == 0:
+                if self.sched.queue:
+                    raise RuntimeError(
+                        "admission stalled with an empty batch — a queued "
+                        "request's page reservation cannot ever be met")
+                if pending:
+                    step_idx = max(step_idx + 1, pending[0].arrival)
+                    continue
+                break
+            with m.span("serve/decode_step", step=step_idx):
+                self.pool, state = self._decode(self.params, self.pool,
+                                                page_table, state)
+            step_idx += 1
+            decode_steps += 1
+            self.sched.tick()
+            m.counter("serve/decode_steps").inc()
+            m.histogram("serve/occupancy").observe(
+                self.sched.active_count / B)
+            completions(state)
+
+        wall = time.perf_counter() - t0
+        ordered = [results[r.rid] for r in
+                   sorted(requests, key=lambda r: r.rid)]
+        done = [r for r in ordered if r.status == "done"]
+        lat = np.asarray([r.latency_s for r in done]) if done else \
+            np.zeros((1,))
+        out = {
+            "results": ordered,
+            "wall_s": wall,
+            "gen_tokens": total_gen,
+            "decode_steps": decode_steps,
+            "tokens_per_sec": total_gen / max(wall, 1e-9),
+            "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+            "ttft_mean_ms": float(np.mean([r.ttft_s for r in done]) * 1e3)
+            if done else 0.0,
+            "tpot_mean_ms": float(np.mean([r.tpot_s for r in done]) * 1e3)
+            if done else 0.0,
+            "rejected": sum(r.status == "rejected" for r in ordered),
+            "kv_pool_bytes": self.layout.pool_bytes,
+            "kv_f32_pool_bytes": self.layout.f32_pool_bytes,
+            "kv_bits": self.layout.bits,
+            "kv_mechanism": self.mechanism,
+            "mode": self.mode,
+        }
+        if self.collect_logits:
+            out["logits"] = logits_rows
+        return out

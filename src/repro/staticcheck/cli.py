@@ -72,6 +72,7 @@ def run_pass(name: str, cache: pathlib.Path | None) -> list[fmod.Finding]:
             out.extend(plan_verify.verify_plan(
                 case.plan, case.cfg, case.in_dim, case.n_nodes,
                 where=case.key))
+        out.extend(plan_verify.verify_kv_matrix())
         return out
     if name == "kernel-contracts":
         return kernel_contracts.run()

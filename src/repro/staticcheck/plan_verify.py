@@ -222,6 +222,77 @@ def verify_stash_plan(splan: StashPlan,
     return out
 
 
+def verify_kv_layout(layout, where: str = "kv-layout",
+                     segments=None) -> list[Finding]:
+    """Prove a serving :class:`~repro.serving.kvcache.KVPageLayout`'s
+    page map sound: every (layer, page) segment word-aligned to the quant
+    packing, sized to the re-derived geometry, in-bounds of the pool's
+    flat word space, and non-overlapping.  ``segments`` defaults to the
+    layout's own map; tests inject crafted maps to pin each rule."""
+    out = []
+    if layout.quantized:
+        vals_per_word = 32 // layout.bits
+        if layout.group_size % vals_per_word:
+            out.append(Finding(
+                PASS, "kv-page-alignment", where,
+                f"group_size={layout.group_size} does not pack whole uint32 "
+                f"words at bits={layout.bits} ({vals_per_word} values/word); "
+                "a token's trailing block would straddle a word"))
+        want_wpb = packmod.packed_len(layout.group_size, layout.bits)
+        want_wpp = layout.page_tokens * layout.blocks_per_token * want_wpb
+    else:
+        want_wpp = layout.page_tokens * layout.elems_per_token * 2 // 4
+    if layout.words_per_page != want_wpp:
+        out.append(Finding(
+            PASS, "kv-page-geometry", where,
+            f"words_per_page={layout.words_per_page} does not match the "
+            f"re-derived {want_wpp} (page_tokens={layout.page_tokens} x "
+            f"{layout.blocks_per_token} blocks/token at bits={layout.bits})"))
+    if layout.elems_per_token % max(layout.group_size, 1):
+        out.append(Finding(
+            PASS, "kv-page-geometry", where,
+            f"group_size={layout.group_size} does not divide the "
+            f"{layout.elems_per_token}-element token row; a quant block "
+            "would straddle tokens"))
+    total = layout.total_words
+    spans = []
+    segs = list(layout.page_segments()) if segments is None else segments
+    for li, p, off, size in segs:
+        swhere = f"{where}/layer{li}/page{p}"
+        if size != layout.words_per_page:
+            out.append(Finding(
+                PASS, "kv-page-geometry", swhere,
+                f"segment spans {size} words, layout says "
+                f"{layout.words_per_page} per page"))
+        if off < 0 or off + size > total:
+            out.append(Finding(
+                PASS, "kv-page-bounds", swhere,
+                f"[{off}, {off + size}) lies outside the {total}-word pool"))
+        spans.append((off, off + size, swhere))
+    spans.sort()
+    for (a0, a1, wa), (b0, b1, wb) in zip(spans[:-1], spans[1:]):
+        if b0 < a1:
+            out.append(Finding(
+                PASS, "kv-page-overlap", wb,
+                f"[{b0}, {b1}) overlaps {wa} [{a0}, {a1})"))
+    return out
+
+
+def verify_kv_matrix() -> list[Finding]:
+    """KV-page soundness across every supported serving cache width, over
+    the canonical smoke decode geometry."""
+    from repro.serving.kvcache import KV_BITS, KVCacheConfig, plan_kv_layout
+
+    out = []
+    for bits in KV_BITS:
+        layout = plan_kv_layout(
+            KVCacheConfig(bits=bits, group_size=64, page_tokens=16,
+                          n_pages=64),
+            n_layers=2, n_kv_heads=4, d_head=16)
+        out.extend(verify_kv_layout(layout, where=f"kv-layout/bits{bits}"))
+    return out
+
+
 def verify_plan(plan: ExecutionPlan, cfg, in_dim: int, n_nodes: int, *,
                 devices: int = 1, where: str | None = None) -> list[Finding]:
     """All symbolic checks for one (plan, model, graph-size) triple."""

@@ -1,0 +1,206 @@
+"""Continuous-batching serving engine + paged quantized KV cache.
+
+Pins the ISSUE-10 contracts: page-allocator bounds/geometry, layout
+byte accounting (bits=4 >= 3x smaller than f32), raw/quantized pool
+roundtrips, the bits=16 engine bit-identical to the legacy fixed-batch
+loop (continuous AND fixed modes, at capacity), bits=8 logits parity
+within tolerance, slot reuse under a single-slot engine, and admission
+rejection reasons."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduce_for_smoke
+from repro.launch.steps import make_serve_step
+from repro.models import Model
+from repro.serving import (KVCacheConfig, PageAllocator, Request,
+                           ServeEngine, plan_kv_layout)
+from repro.serving import kvcache
+
+S, GEN, T = 8, 6, 4                    # prompt len, gen budget, page tokens
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["qwen1.5-4b"]),
+                              act_mode="none")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (3, S), 0, cfg.vocab), np.int32)
+    return model, params, prompts
+
+
+def _legacy_tokens(model, params, prompts, max_seq):
+    serve = jax.jit(make_serve_step(model))
+    logits, cache = model.prefill(params, jnp.asarray(prompts),
+                                  max_seq=max_seq)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    gen = [np.asarray(tok)]
+    for _ in range(GEN - 1):
+        tok, _, cache = serve(params, cache, tok)
+        gen.append(np.asarray(tok))
+    return np.concatenate(gen, axis=1)
+
+
+def _run(model, params, prompts, *, bits, n_pages, max_batch, mode,
+         max_queue=64, **kw):
+    kv = KVCacheConfig(bits=bits, group_size=64, page_tokens=T,
+                       n_pages=n_pages)
+    eng = ServeEngine(model, params, kv=kv, max_batch=max_batch,
+                      max_prompt=S, gen_cap=GEN, mode=mode,
+                      max_queue=max_queue, **kw)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=GEN)
+            for i in range(len(prompts))]
+    return eng.run(reqs)
+
+
+# ------------------------------------------------------------- allocator
+def test_page_allocator_bounds_and_reuse():
+    a = PageAllocator(4)
+    p1 = a.alloc(3)
+    assert p1 == [0, 1, 2] and a.free_pages == 1 and a.used_pages == 3
+    assert a.alloc(2) is None          # over capacity -> hold, not error
+    a.free([1])
+    assert a.alloc(2) == [1, 3]        # freed page is reused first (LIFO)
+    with pytest.raises(ValueError, match="double free"):
+        a.free([0, 0])
+    with pytest.raises(ValueError, match="outside"):
+        a.free([4])
+    with pytest.raises(ValueError):
+        PageAllocator(0)
+
+
+# ---------------------------------------------------------------- layout
+def test_plan_kv_layout_validates_and_counts_bytes():
+    mk = lambda **kw: plan_kv_layout(KVCacheConfig(**kw), n_layers=2,
+                                     n_kv_heads=4, d_head=16)
+    with pytest.raises(ValueError, match="bits"):
+        mk(bits=3)
+    with pytest.raises(ValueError, match="divide"):
+        mk(group_size=48)              # 64-elem token row, 48 straddles
+    with pytest.raises(ValueError, match="offload"):
+        plan_kv_layout(KVCacheConfig(policy="bogus"), n_layers=2,
+                       n_kv_heads=4, d_head=16)
+    lay4, lay16 = mk(bits=4), mk(bits=16)
+    # bits=4 pool must undercut the uncompressed-f32 pool >= 3x (gated
+    # end-to-end in BENCH_serve.json's bytes_gate)
+    assert lay4.f32_pool_bytes / lay4.pool_bytes >= 3.0
+    assert lay16.pool_bytes == lay16.f32_pool_bytes // 2   # raw bf16
+    segs = list(lay4.page_segments())
+    assert len(segs) == lay4.n_layers * lay4.n_pages
+    assert segs[-1][2] + segs[-1][3] == lay4.total_words
+
+
+# ------------------------------------------------------------ roundtrips
+@pytest.mark.parametrize("bits", [16, 8])
+def test_pool_roundtrip_prompt_write(bits):
+    lay = plan_kv_layout(KVCacheConfig(bits=bits, group_size=64,
+                                       page_tokens=T, n_pages=8),
+                         n_layers=2, n_kv_heads=4, d_head=16)
+    pool = kvcache.init_kv_pool(lay)
+    B = 2
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, B, S, 4, 16),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, B, S, 4, 16),
+                          jnp.bfloat16)
+    npg = S // T
+    phys = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    pool = kvcache.write_prompt(pool, lay, k, v, phys,
+                                jnp.asarray([0, 1], jnp.int32))
+    table = jnp.pad(phys, ((0, 0), (0, 2)), constant_values=lay.null_page)
+    pool_l0 = jax.tree.map(lambda a: a[0], pool)
+    if bits == 16:
+        kf, vf = kvcache.gather_kv_raw(pool_l0, lay, table)
+        np.testing.assert_array_equal(
+            np.asarray(kf[:, :S]), np.asarray(k[0].astype(jnp.float32)))
+        # unallocated pages read as zeros (legacy padding semantics)
+        assert not np.any(np.asarray(kf[:, S:]))
+    else:
+        fetch = kvcache.make_page_fetch(pool_l0, lay, table)
+        kf0, vf0, kv_pos = fetch(jnp.int32(0))
+        np.testing.assert_array_equal(np.asarray(kv_pos), np.arange(T))
+        ref = np.asarray(k[0, :, :T].astype(jnp.float32))
+        got = np.asarray(kf0)
+        # int8 blockwise SR: reconstruction within a range-step of truth
+        assert np.max(np.abs(got - ref)) <= np.ptp(ref) / (2**bits - 1) + 1e-6
+        k2, _, pos2 = fetch(jnp.int32(3))       # null page -> zeros
+        assert not np.any(np.asarray(k2))
+        np.testing.assert_array_equal(np.asarray(pos2),
+                                      3 * T + np.arange(T))
+
+
+# ------------------------------------------------------ engine contracts
+def test_engine_bits16_bit_identical_to_legacy(served):
+    model, params, prompts = served
+    maxp = -(-(S + GEN - 1) // T)
+    legacy = _legacy_tokens(model, params, prompts, maxp * T)
+    for mode in ("continuous", "fixed"):
+        out = _run(model, params, prompts, bits=16, n_pages=3 * maxp,
+                   max_batch=3, mode=mode)
+        got = np.stack([r.tokens for r in out["results"]])
+        np.testing.assert_array_equal(got, legacy)
+        assert out["rejected"] == 0
+        assert out["gen_tokens"] == 3 * GEN
+
+
+def test_engine_bits8_logits_parity(served):
+    model, params, prompts = served
+    maxp = -(-(S + GEN - 1) // T)
+    outs = {bits: _run(model, params, prompts[:1], bits=bits, n_pages=maxp,
+                       max_batch=1, mode="continuous", collect_logits=True)
+            for bits in (16, 8)}
+    l16, l8 = outs[16]["logits"][0], outs[8]["logits"][0]
+    # step 0 comes out of full-precision prefill: exactly equal
+    np.testing.assert_array_equal(l8[0], l16[0])
+    # step 1 reads the int8 prompt KV: parity within tolerance
+    assert np.max(np.abs(l8[1] - l16[1])) < 0.5, \
+        np.max(np.abs(l8[1] - l16[1]))
+    assert np.argmax(l8[1]) == np.argmax(l16[1])
+
+
+def test_engine_slot_reuse_single_slot(served):
+    model, params, prompts = served
+    maxp = -(-(S + GEN - 1) // T)
+    legacy = _legacy_tokens(model, params, prompts, maxp * T)
+    out = _run(model, params, prompts, bits=16, n_pages=maxp, max_batch=1,
+               mode="continuous")
+    # one slot serves all three requests in sequence; each row must match
+    # the legacy batch row exactly (pages freed and reused in between)
+    got = np.stack([r.tokens for r in out["results"]])
+    np.testing.assert_array_equal(got, legacy)
+    assert out["decode_steps"] == 3 * (GEN - 1)
+
+
+def test_admission_rejection_reasons(served):
+    model, params, prompts = served
+    maxp = -(-(S + GEN - 1) // T)
+    out = _run(model, params, prompts, bits=16, n_pages=maxp, max_batch=1,
+               mode="continuous", max_queue=2)
+    # all three arrive before the first admit; the 2-deep queue holds the
+    # first two and bounces the third at the door
+    statuses = [r.status for r in out["results"]]
+    assert statuses == ["done", "done", "rejected"]
+    assert "queue full" in out["results"][2].reason
+    assert out["rejected"] == 1
+
+    kv = KVCacheConfig(bits=16, page_tokens=T, n_pages=maxp)
+    eng = ServeEngine(model, params, kv=kv, max_batch=1, max_prompt=S,
+                      gen_cap=GEN)
+    ok, reason = eng.sched.submit(
+        Request(rid=9, prompt=np.zeros(4 * S, np.int32), max_new=GEN))
+    assert not ok and "prompt length" in reason
+    ok, reason = eng.sched.submit(
+        Request(rid=10, prompt=prompts[0], max_new=10 * GEN))
+    assert not ok and "max_new" in reason
+
+
+def test_engine_rejects_non_attention_families(served):
+    cfg = dataclasses.replace(reduce_for_smoke(ARCHS["mamba2-780m"]),
+                              act_mode="none")
+    model = Model(cfg)
+    with pytest.raises(ValueError, match="families"):
+        ServeEngine(model, {}, max_batch=1, max_prompt=S, gen_cap=GEN)

@@ -93,6 +93,43 @@ def test_real_matrix_verifies_clean():
                                        case.n_nodes, where=case.key) == []
 
 
+def test_kv_matrix_verifies_clean():
+    assert plan_verify.verify_kv_matrix() == []
+
+
+def _kv_layout(**kw):
+    from repro.serving.kvcache import KVCacheConfig, plan_kv_layout
+
+    return plan_kv_layout(KVCacheConfig(**kw), n_layers=2, n_kv_heads=4,
+                          d_head=16)
+
+
+def test_kv_page_overlap_and_bounds_exactly_detected():
+    lay = _kv_layout(bits=4, n_pages=8)
+    w = lay.words_per_page
+    # page 1 starts one word inside page 0's span
+    got = plan_verify.verify_kv_layout(
+        lay, segments=[(0, 0, 0, w), (0, 1, w - 1, w)])
+    assert [f.rule for f in got] == ["kv-page-overlap"]
+    # last page pushed one word past the pool end
+    got = plan_verify.verify_kv_layout(
+        lay, segments=[(1, 7, lay.total_words - w + 1, w)])
+    assert [f.rule for f in got] == ["kv-page-bounds"]
+    # a segment sized off-geometry
+    got = plan_verify.verify_kv_layout(lay, segments=[(0, 0, 0, w - 2)])
+    assert [f.rule for f in got] == ["kv-page-geometry"]
+
+
+def test_kv_word_alignment_exactly_detected():
+    import dataclasses as dc
+
+    # bypass plan_kv_layout validation: group of 6 at bits=8 leaves a
+    # ragged 2-value tail in the last packed word of every block
+    lay = dc.replace(_kv_layout(bits=8), group_size=6)
+    rules = {f.rule for f in plan_verify.verify_kv_layout(lay)}
+    assert "kv-page-alignment" in rules
+
+
 def test_mesh_cross_policy_rules():
     plan = ExecutionPlan(
         sampling=SamplingPolicy(kind="mesh", n_parts=4),

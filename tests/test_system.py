@@ -30,19 +30,26 @@ def test_train_launcher_resume(tmp_path):
     assert hist[0]["step"] == 6 and len(hist) == 3
 
 
-def test_serve_launcher_offload_smoke():
-    """``launch.serve --offload host`` exercises the arena read side on the
-    serving path: prompt embeddings are stashed compressed through the
-    offload engine and read back before decoding; outputs must still be
-    produced and the callback host store must drain."""
-    from repro.offload.engine import host_store_bytes
-
+def test_serve_launcher_paged_kv_smoke():
+    """``launch.serve`` on an attention family routes through the
+    continuous-batching engine with a quantized paged KV cache under the
+    host placement policy; every request must come back with its full
+    generation budget."""
     outs = serve_main(["--arch", "qwen1.5-4b", "--smoke",
-                       "--requests", "2", "--batch", "2",
+                       "--requests", "2", "--max-batch", "2",
                        "--prompt-len", "8", "--gen-len", "4",
-                       "--offload", "host"])
-    assert len(outs) == 1 and outs[0].shape == (2, 4)
-    assert host_store_bytes() == 0
+                       "--kv-bits", "8", "--kv-policy", "host"])
+    assert len(outs) == 2 and all(o.shape == (4,) for o in outs)
+
+
+def test_serve_launcher_legacy_family_smoke():
+    """Non-attention families (SSM state caches are not paged-KV shaped)
+    still serve through the fixed-batch fallback loop, which accumulates
+    tokens device-side and transfers once per batch."""
+    outs = serve_main(["--arch", "mamba2-780m", "--smoke",
+                       "--requests", "2", "--max-batch", "2",
+                       "--prompt-len", "16", "--gen-len", "4"])
+    assert len(outs) == 2 and all(o.shape == (4,) for o in outs)
 
 
 def test_serve_loop_greedy_decode():
